@@ -1,0 +1,37 @@
+"""Energy-efficiency benchmark (paper's second evaluation axis).
+
+The paper's abstract promises "precise evaluation of system performance
+AND energy efficiency"; this benchmark reports pJ/op for PIM vs the
+non-PIM baseline across dtypes and dims, plus the flush-mode comparison
+(RD_ACC bus read-out vs MOV_ACC internal ACC->DRAM movement).
+"""
+from __future__ import annotations
+
+from repro.core.pimsim import PimSimulator
+from repro.pimkernel.tileconfig import ALL_DTYPES, PimDType
+
+
+def main() -> dict:
+    sim = PimSimulator()
+    out = {}
+    for dt in ALL_DTYPES:
+        p = sim.gemv(4096, 4096, dt)
+        b = sim.baseline(4096, 4096, dt)
+        ratio = b.energy["pj_per_op"] / p.energy["pj_per_op"]
+        out[dt.name] = dict(pim=p.energy["pj_per_op"],
+                            base=b.energy["pj_per_op"], ratio=ratio)
+        print(f"energy/{dt.name},{p.energy['pj_per_op']:.3f},{ratio:.3f}")
+    # flush-mode comparison (W8A8): bus read-out vs internal DRAM move
+    for flush in ("bus", "dram"):
+        r = sim.gemv(4096, 4096, PimDType.W8A8, flush=flush)
+        print(f"energy/flush_{flush},{r.ns/1e3:.2f},"
+              f"{r.energy['pj_per_op']:.3f}")
+    # energy scales down with dim (fixed overheads amortize)
+    for d in (512, 2048, 8192):
+        r = sim.gemv(d, d, PimDType.W8A8)
+        print(f"energy/dim{d},{r.ns/1e3:.2f},{r.energy['pj_per_op']:.3f}")
+    return out
+
+
+if __name__ == "__main__":
+    main()

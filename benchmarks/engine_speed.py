@@ -1,0 +1,52 @@
+"""Simulator-throughput microbenchmark: JAX scan engine vs Python oracle.
+
+The JAX engine is what makes full-figure sweeps tractable (DESIGN.md §2.1);
+this benchmark quantifies the speedup in resolved commands/second.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import commands as C
+from repro.core.engine import make_engine, run_streams
+from repro.core.engine_ref import RefEngine
+from repro.core.timing import DEFAULT_SYSTEM
+from repro.pimkernel.executor import PimExecutor
+from repro.pimkernel.tileconfig import PimDType
+
+
+def main() -> dict:
+    cyc = DEFAULT_SYSTEM.derive_cycles()
+    ex = PimExecutor(DEFAULT_SYSTEM)
+    layout, program = ex.plan(4096, 4096, PimDType.W8A8)
+    gs = ex.build_streams(layout, program)
+    stream = gs.streams[0]
+    n = stream.shape[0]
+
+    # Python oracle on a prefix (full stream would take minutes).
+    prefix = stream[: min(n, 20000)]
+    t0 = time.perf_counter()
+    RefEngine(cyc, validate=False).run(prefix)
+    ref_s = time.perf_counter() - t0
+    ref_rate = prefix.shape[0] / ref_s
+
+    # JAX engine: jit warmup, then timed.
+    run_streams(cyc, [stream])
+    t0 = time.perf_counter()
+    reps = 5
+    for _ in range(reps):
+        run_streams(cyc, [stream])
+    jax_s = (time.perf_counter() - t0) / reps
+    jax_rate = n / jax_s
+
+    print(f"engine/ref,{ref_s*1e6/prefix.shape[0]*1e0:.3f},{ref_rate:.0f}")
+    print(f"engine/jax,{jax_s*1e6/n:.3f},{jax_rate:.0f}")
+    print(f"engine/speedup,{jax_s*1e6:.1f},{jax_rate/ref_rate:.1f}")
+    return dict(ref_cmds_per_s=ref_rate, jax_cmds_per_s=jax_rate,
+                speedup=jax_rate / ref_rate, stream_len=n)
+
+
+if __name__ == "__main__":
+    main()

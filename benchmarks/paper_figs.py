@@ -1,0 +1,96 @@
+"""Paper-reproduction benchmarks: Fig. 4a, Fig. 4b, §3.3 Reshape.
+
+Each function prints ``name,us_per_call,derived`` CSV rows and returns a
+dict used by EXPERIMENTS.md generation.  "derived" is the paper-comparable
+number (speedup ratio / gain).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.pimsim import PimSimulator
+from repro.pimkernel.tileconfig import ALL_DTYPES, PimDType
+
+DIMS = [512, 1024, 2048, 4096, 8192]
+BASE = 4096
+
+# Paper targets at the 4096 baseline dimension (Fig. 4 text, §3.1/3.2).
+PAPER_TARGETS = {
+    ("W8A8", False): 6.1, ("W4A4", False): 6.1, ("FP_W8A8", False): 6.1,
+    ("W8A16", False): 5.75, ("W4A16", False): 5.75, ("FP_W8A16", False): 5.75,
+    ("W4A8", False): 5.9,
+    ("W4A16", True): 4.1,
+}
+
+
+def fig4a(sim: PimSimulator | None = None) -> dict:
+    """GEMV speedup across dims/dtypes, no memory fence (Fig. 4a)."""
+    sim = sim or PimSimulator()
+    out = {}
+    for axis in ("activation", "output"):
+        sweep = sim.sweep(DIMS, ALL_DTYPES, axis=axis, base_dim=BASE)
+        out[axis] = sweep
+        for name, row in sweep.items():
+            for d, s in zip(DIMS, row):
+                pim_us = sim.gemv(*( (BASE, d) if axis == "activation"
+                                     else (d, BASE)), name).ns / 1e3
+                print(f"fig4a/{axis}/{name}/dim{d},{pim_us:.2f},{s:.3f}")
+    return out
+
+
+def fig4b(sim: PimSimulator | None = None) -> dict:
+    """GEMV speedup with a 150 ns memory fence between tiles (Fig. 4b)."""
+    sim = sim or PimSimulator()
+    out = {}
+    for axis in ("activation", "output"):
+        sweep = sim.sweep(DIMS, ALL_DTYPES, axis=axis, base_dim=BASE,
+                          fence=True)
+        out[axis] = sweep
+        for name, row in sweep.items():
+            for d, s in zip(DIMS, row):
+                pim_us = sim.gemv(*( (BASE, d) if axis == "activation"
+                                     else (d, BASE)), name,
+                                  fence=True).ns / 1e3
+                print(f"fig4b/{axis}/{name}/dim{d},{pim_us:.2f},{s:.3f}")
+    return out
+
+
+def reshape(sim: PimSimulator | None = None) -> dict:
+    """§3.3: reshape-optimization gain on small output dims."""
+    sim = sim or PimSimulator()
+    out = {}
+    for H in (256, 512, 1024, 2048):
+        t0 = sim.gemv(H, BASE, PimDType.W8A8, reshape=False)
+        t1 = sim.gemv(H, BASE, PimDType.W8A8, reshape=True)
+        gain = t0.ns / t1.ns
+        out[H] = dict(gain=gain, util0=t0.utilization,
+                      util1=t1.utilization, split=t1.split)
+        print(f"reshape/H{H},{t1.ns/1e3:.2f},{gain:.3f}")
+    return out
+
+
+def check_paper_targets(sim: PimSimulator | None = None) -> dict:
+    """Deviation table vs the paper's published 4096-dim numbers."""
+    sim = sim or PimSimulator()
+    rows = {}
+    worst = 0.0
+    for (name, fence), target in PAPER_TARGETS.items():
+        got = sim.speedup(BASE, BASE, name, fence=fence)
+        dev = (got - target) / target
+        worst = max(worst, abs(dev))
+        rows[(name, fence)] = (got, target, dev)
+        print(f"target/{name}{'/fence' if fence else ''},"
+              f"{sim.gemv(BASE, BASE, name, fence=fence).ns/1e3:.2f},"
+              f"{got:.3f} (paper {target}, dev {dev:+.1%})")
+    rows["worst_abs_dev"] = worst
+    return rows
+
+
+def main() -> dict:
+    sim = PimSimulator()
+    return dict(fig4a=fig4a(sim), fig4b=fig4b(sim), reshape=reshape(sim),
+                targets=check_paper_targets(sim))
+
+
+if __name__ == "__main__":
+    main()

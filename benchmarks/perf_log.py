@@ -1,0 +1,87 @@
+"""§Perf hillclimb utilities + the structured iteration log.
+
+Each iteration: hypothesis -> change (a dry-run --variant) -> measured
+roofline terms before/after -> confirmed/refuted + lesson.  The table in
+EXPERIMENTS.md §Perf renders PERF_LOG; `compare()` recomputes the terms
+from the stored dry-run artifacts so the numbers are reproducible.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+
+from repro.configs import ARCHS, SHAPES
+from repro.distribution import roofline as RLmod
+from repro.distribution import sharding as SHmod
+from repro.distribution.roofline import RooflineTerms, min_traffic_bytes
+
+DRYRUN = pathlib.Path(__file__).resolve().parents[1] / "experiments" / \
+    "dryrun"
+
+
+def load_cell(arch: str, shape: str, mesh: str = "pod1",
+              variant: str = "baseline") -> dict:
+    suffix = "" if variant == "baseline" else f"__{variant}"
+    p = DRYRUN / f"{arch}__{shape}__{mesh}{suffix}.json"
+    return json.loads(p.read_text())
+
+
+def terms(rec: dict) -> RooflineTerms:
+    from repro.models import model as Mmod
+    variant = rec.get("variant", "baseline")
+    SHmod.SERVE_TP_ONLY = variant.startswith("serve-tp")
+    RLmod.FLASH_SKIP_BLOCKS = "flash-skip" in variant
+    Mmod.QUANT_BITS = 8 if "w8" in variant else \
+        4 if "w4" in variant else 0
+    Mmod.KV_QUANT = "kv8" in variant
+    try:
+        cfg = ARCHS[rec["arch"]]
+        shape = SHAPES[rec["shape"]]
+        ex = rec.get("extrap", {})
+        chips = rec["chips"]
+        return RooflineTerms(
+            arch=rec["arch"], shape=rec["shape"], mesh=rec["mesh"],
+            chips=chips,
+            hlo_flops=ex.get("flops_dev", rec["flops"]) * chips,
+            hlo_bytes=ex.get("bytes_dev", rec["bytes_accessed"]) * chips,
+            coll_bytes=rec["collective"]["total"] * chips,
+            model_flops=rec["model_flops"],
+            traffic_dev=min_traffic_bytes(cfg, shape),
+        )
+    finally:
+        SHmod.SERVE_TP_ONLY = False
+        RLmod.FLASH_SKIP_BLOCKS = False
+        Mmod.QUANT_BITS = 0
+        Mmod.KV_QUANT = False
+
+
+def compare(arch: str, shape: str, variants: list[str],
+            mesh: str = "pod1") -> None:
+    print(f"== {arch} / {shape} / {mesh} ==")
+    print(f"{'variant':18s} {'compute':>10s} {'memory':>10s} "
+          f"{'collective':>11s} {'dominant':>10s} {'frac':>7s}")
+    for v in ["baseline"] + variants:
+        try:
+            t = terms(load_cell(arch, shape, mesh, v))
+        except FileNotFoundError:
+            print(f"{v:18s} (not measured)")
+            continue
+        print(f"{v:18s} {t.t_compute*1e3:9.2f}ms {t.t_memory*1e3:9.2f}ms "
+              f"{t.t_collective*1e3:10.2f}ms {t.bottleneck:>10s} "
+              f"{t.roofline_fraction:7.3f}")
+
+
+# ----------------------------------------------------------------------
+# The iteration log (EXPERIMENTS.md §Perf renders this).
+# ----------------------------------------------------------------------
+PERF_LOG: list[dict] = []
+
+
+def log(cell, it, hypothesis, change, before, after, verdict, lesson):
+    PERF_LOG.append(dict(cell=cell, iteration=it, hypothesis=hypothesis,
+                         change=change, before=before, after=after,
+                         verdict=verdict, lesson=lesson))
+
+
+if __name__ == "__main__":
+    compare("qwen2-72b", "decode_32k", ["serve-tp"])

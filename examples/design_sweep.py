@@ -1,0 +1,40 @@
+"""Design-space exploration: sweep PIM parameters with the simulator.
+
+The paper positions LP5X-PIM Sim as "a robust framework for exploring PIM
+architectures and software stacks"; this example sweeps two hardware knobs
+(MAC interval, SRF capacity) and one software knob (reshape) and prints
+the speedup surface — the kind of study the simulator exists for.
+
+    PYTHONPATH=src python examples/design_sweep.py
+"""
+import dataclasses
+
+from repro.core.pimsim import PimSimulator
+from repro.core.timing import PimSpec, SystemSpec
+from repro.pimkernel.tileconfig import PimDType
+
+H = W = 4096
+DT = PimDType.W8A8
+
+print(f"speedup surface for {H}x{W} {DT.name} "
+      "(rows: MAC interval CK; cols: SRF bytes)\n")
+srf_options = (256, 512, 1024)
+print("          " + "".join(f"srf={s:<6}" for s in srf_options))
+for mac in (2, 3, 4, 6):
+    row = []
+    for srf in srf_options:
+        spec = SystemSpec(pim=PimSpec(mac_interval_ck=mac, srf_bytes=srf))
+        row.append(PimSimulator(spec).speedup(H, W, DT))
+    print(f"mac={mac} CK  " + "".join(f"{s:<10.2f}" for s in row))
+
+print("\nlesson: the MAC interval dominates (compute-limited MB mode); "
+      "doubling SRF helps only the small-tile dtypes via fewer chunk "
+      "reloads.")
+
+print("\nsoftware knob — reshape split cap (paper caps gains ~1.65x):")
+for cap in (1, 2, 4):
+    spec = SystemSpec(pim=PimSpec(max_reshape_split=cap))
+    sim = PimSimulator(spec)
+    g = sim.gemv(1024, 4096, DT, reshape=False).ns / \
+        sim.gemv(1024, 4096, DT, reshape=True).ns
+    print(f"  max_split={cap}: reshape gain {g:.2f}x at H=1024")

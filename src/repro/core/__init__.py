@@ -1,0 +1,3 @@
+"""LP5X-PIM hardware model: timing engine, controller, device, energy."""
+from .timing import SystemSpec, LpddrTimings, PimSpec, DEFAULT_SYSTEM  # noqa: F401
+from .pimsim import PimSimulator  # noqa: F401

@@ -1,0 +1,322 @@
+"""JAX cycle-accurate timing engine.
+
+The same semantics as ``engine_ref.RefEngine`` expressed as a
+``jax.lax.scan`` over the command stream with a ``lax.switch`` on the
+opcode.  The scan carry holds the full channel timing state; each step
+emits the command's issue cycle.  The engine is jit-compiled (one
+compilation per ``TimingCycles`` instance and stream length bucket) and
+``vmap``-ed over the channel axis, giving ~10^6-10^7 resolved commands/s on
+one CPU core — two to three orders of magnitude over the Python oracle,
+which is what makes the full Fig-4 sweeps tractable.
+
+On TPU the same scan runs on the scalar/vector units and the *fleet*
+dimensions (channels × design-space points) become the parallel axes —
+see DESIGN.md §2.1/§2.3 for the hardware-adaptation discussion.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import commands as C
+from .timing import TimingCycles
+
+NEG = -(1 << 30)
+I32 = jnp.int32
+
+
+def _fresh_state(nb: int):
+    z = jnp.zeros((), I32)
+    neg = jnp.full((), NEG, I32)
+    return dict(
+        open_row=jnp.full((nb,), -1, I32),
+        ready_act=jnp.zeros((nb,), I32),
+        act_cycle=jnp.full((nb,), NEG, I32),
+        rd_cycle=jnp.full((nb,), NEG, I32),
+        wr_end=jnp.full((nb,), NEG, I32),
+        faw=jnp.full((4,), NEG, I32),
+        faw_i=z, last_act=neg, last_actmb=neg, last_cas=neg,
+        bus_free=z, bus_dir=z, cmd_free=z,
+        last_mac=neg, srf_ready=z, mac_pipe_end=z,
+        mode=z, mode_ready=z, drain=z, fence_until=z,
+    )
+
+
+def _build_step(c: TimingCycles):
+    nb = c.num_banks
+    bank_ids = jnp.arange(nb, dtype=I32)
+
+    def base_t0(st):
+        return jnp.maximum(jnp.maximum(st["cmd_free"], st["fence_until"]),
+                           st["mode_ready"])
+
+    # Each branch: (st, a, b, col) -> (st, t)
+    def op_nop(st, a, b, col):
+        return st, base_t0(st)
+
+    def op_act(st, a, b, col):
+        t0 = base_t0(st)
+        t = jnp.maximum(t0, st["ready_act"][a])
+        t = jnp.maximum(t, st["act_cycle"][a] + c.cRC)
+        t = jnp.maximum(t, st["last_act"] + c.cRRD)
+        t = jnp.maximum(t, st["faw"][st["faw_i"]] + c.cFAW)
+        st = dict(st)
+        st["open_row"] = st["open_row"].at[a].set(b)
+        st["act_cycle"] = st["act_cycle"].at[a].set(t)
+        st["last_act"] = t
+        st["faw"] = st["faw"].at[st["faw_i"]].set(t)
+        st["faw_i"] = (st["faw_i"] + 1) % 4
+        st["cmd_free"] = t + c.cACT
+        st["drain"] = jnp.maximum(st["drain"], t + c.cRCD)
+        return st, t
+
+    def op_pre(st, a, b, col):
+        t0 = base_t0(st)
+        t = jnp.maximum(t0, st["act_cycle"][a] + c.cRAS)
+        t = jnp.maximum(t, st["rd_cycle"][a] + c.cRTP)
+        t = jnp.maximum(t, st["wr_end"][a] + c.cWR)
+        st = dict(st)
+        st["open_row"] = st["open_row"].at[a].set(-1)
+        st["ready_act"] = st["ready_act"].at[a].set(t + c.cRP)
+        st["cmd_free"] = t + c.cPRE
+        st["drain"] = jnp.maximum(st["drain"], t + c.cRP)
+        return st, t
+
+    def op_prea(st, a, b, col):
+        t0 = base_t0(st)
+        t = jnp.maximum(t0, jnp.max(st["act_cycle"]) + c.cRAS)
+        t = jnp.maximum(t, jnp.max(st["rd_cycle"]) + c.cRTP)
+        t = jnp.maximum(t, jnp.max(st["wr_end"]) + c.cWR)
+        t = jnp.maximum(t, st["last_mac"] + c.cRTP)
+        st = dict(st)
+        st["open_row"] = jnp.full((nb,), -1, I32)
+        st["ready_act"] = jnp.full((nb,), 0, I32) + t + c.cRP
+        st["cmd_free"] = t + c.cPRE
+        st["drain"] = jnp.maximum(st["drain"], t + c.cRP)
+        return st, t
+
+    def op_rd(st, a, b, col):
+        t0 = base_t0(st)
+        turn = jnp.where(st["bus_dir"] == 1, c.cWTR, 0)
+        t = jnp.maximum(t0, st["act_cycle"][a] + c.cRCD)
+        t = jnp.maximum(t, st["last_cas"] + c.cCCD)
+        t = jnp.maximum(t, st["bus_free"] + turn - c.cRL)
+        t = jnp.maximum(t, st["wr_end"][a] + c.cWTR)
+        st = dict(st)
+        st["rd_cycle"] = st["rd_cycle"].at[a].set(t)
+        st["last_cas"] = t
+        st["bus_free"] = t + c.cRL + c.cBURST
+        st["bus_dir"] = jnp.zeros((), I32)
+        st["cmd_free"] = t + c.cCAS
+        st["drain"] = jnp.maximum(st["drain"], t + c.cRL + c.cBURST)
+        return st, t
+
+    def op_wr(st, a, b, col):
+        t0 = base_t0(st)
+        turn = jnp.where(st["bus_dir"] == 0, c.cRTW, 0)
+        t = jnp.maximum(t0, st["act_cycle"][a] + c.cRCD)
+        t = jnp.maximum(t, st["last_cas"] + c.cCCD)
+        t = jnp.maximum(t, st["bus_free"] + turn - c.cWL)
+        end = t + c.cWL + c.cBURST
+        st = dict(st)
+        st["wr_end"] = st["wr_end"].at[a].set(end)
+        st["last_cas"] = t
+        st["bus_free"] = end
+        st["bus_dir"] = jnp.ones((), I32)
+        st["cmd_free"] = t + c.cCAS
+        st["drain"] = jnp.maximum(st["drain"], end)
+        return st, t
+
+    def op_refab(st, a, b, col):
+        t0 = base_t0(st)
+        t = jnp.maximum(t0, jnp.max(st["ready_act"]))
+        st = dict(st)
+        st["ready_act"] = jnp.zeros((nb,), I32) + t + c.cRFC
+        st["cmd_free"] = t + c.cACT
+        st["drain"] = jnp.maximum(st["drain"], t + c.cRFC)
+        return st, t
+
+    def _mode(st, new_mode):
+        t = jnp.maximum(base_t0(st), st["drain"])
+        st = dict(st)
+        st["mode"] = jnp.full((), new_mode, I32)
+        st["mode_ready"] = t + c.cMODE
+        st["cmd_free"] = t + c.cACT
+        st["drain"] = jnp.maximum(st["drain"], t + c.cMODE)
+        return st, t
+
+    def op_mode_mb(st, a, b, col):
+        return _mode(st, 1)
+
+    def op_mode_sb(st, a, b, col):
+        return _mode(st, 0)
+
+    def op_act_mb(st, a, b, col):
+        t0 = base_t0(st)
+        mask = (bank_ids % 4) == a
+        t = jnp.maximum(t0, st["last_actmb"] + c.cRRDMB)
+        t = jnp.maximum(t, st["last_act"] + c.cRRD)
+        t = jnp.maximum(t, jnp.max(jnp.where(mask, st["ready_act"], NEG)))
+        t = jnp.maximum(t, jnp.max(jnp.where(mask, st["act_cycle"], NEG)) + c.cRC)
+        st = dict(st)
+        st["open_row"] = jnp.where(mask, b, st["open_row"])
+        st["act_cycle"] = jnp.where(mask, t, st["act_cycle"])
+        st["last_act"] = t
+        st["last_actmb"] = t
+        st["faw"] = st["faw"].at[st["faw_i"]].set(t)
+        st["faw_i"] = (st["faw_i"] + 1) % 4
+        st["cmd_free"] = t + c.cACT
+        st["drain"] = jnp.maximum(st["drain"], t + c.cRCD)
+        return st, t
+
+    def _wr_reg(st, is_srf):
+        t0 = base_t0(st)
+        turn = jnp.where(st["bus_dir"] == 0, c.cRTW, 0)
+        t = jnp.maximum(t0, st["last_cas"] + c.cSRFI)
+        t = jnp.maximum(t, st["bus_free"] + turn - c.cWL)
+        t = jnp.maximum(t, st["last_mac"] + c.cMACWR)
+        end = t + c.cWL + c.cBURST
+        st = dict(st)
+        if is_srf:
+            st["srf_ready"] = jnp.maximum(st["srf_ready"], end)
+        st["last_cas"] = t
+        st["bus_free"] = end
+        st["bus_dir"] = jnp.ones((), I32)
+        st["cmd_free"] = t + c.cCAS
+        st["drain"] = jnp.maximum(st["drain"], end)
+        return st, t
+
+    def op_wr_srf(st, a, b, col):
+        return _wr_reg(st, True)
+
+    def op_wr_irf(st, a, b, col):
+        return _wr_reg(st, False)
+
+    def op_mac(st, a, b, col):
+        t0 = base_t0(st)
+        t = jnp.maximum(t0, st["last_mac"] + c.cMACI)
+        t = jnp.maximum(t, st["srf_ready"])
+        t = jnp.maximum(t, jnp.max(st["act_cycle"]) + c.cRCD)
+        st = dict(st)
+        st["last_mac"] = t
+        st["rd_cycle"] = jnp.zeros((nb,), I32) + t
+        st["mac_pipe_end"] = t + c.cMACPIPE
+        st["cmd_free"] = t + c.cMACCMD
+        st["drain"] = jnp.maximum(st["drain"], t + c.cMACPIPE)
+        return st, t
+
+    def op_rd_acc(st, a, b, col):
+        t0 = base_t0(st)
+        turn = jnp.where(st["bus_dir"] == 1, c.cWTR, 0)
+        t = jnp.maximum(t0, st["mac_pipe_end"])
+        t = jnp.maximum(t, st["last_cas"] + c.cCCD)
+        t = jnp.maximum(t, st["bus_free"] + turn - c.cRL)
+        st = dict(st)
+        st["last_cas"] = t
+        st["bus_free"] = t + c.cRL + c.cBURST
+        st["bus_dir"] = jnp.zeros((), I32)
+        st["cmd_free"] = t + c.cCAS
+        st["drain"] = jnp.maximum(st["drain"], t + c.cRL + c.cBURST)
+        return st, t
+
+    def op_mov_acc(st, a, b, col):
+        t0 = base_t0(st)
+        t = jnp.maximum(t0, st["mac_pipe_end"])
+        t = jnp.maximum(t, st["last_cas"] + c.cCCD)
+        st = dict(st)
+        st["wr_end"] = jnp.maximum(st["wr_end"], t + c.cMOV)
+        st["last_cas"] = t
+        st["cmd_free"] = t + c.cCAS
+        st["drain"] = jnp.maximum(st["drain"], t + c.cMOV)
+        return st, t
+
+    def op_fence(st, a, b, col):
+        t = st["drain"] + c.cFENCE
+        st = dict(st)
+        st["fence_until"] = t
+        st["cmd_free"] = t
+        st["drain"] = t
+        return st, t
+
+    branches = [op_nop, op_act, op_pre, op_prea, op_rd, op_wr, op_refab,
+                op_mode_mb, op_mode_sb, op_act_mb, op_prea, op_wr_srf,
+                op_wr_irf, op_mac, op_rd_acc, op_mov_acc, op_fence]
+    assert len(branches) == C.NUM_OPCODES
+
+    def step(st, cmd):
+        op, a, b, col = cmd[0], cmd[1], cmd[2], cmd[3]
+        st, t = jax.lax.switch(op, branches, st, a, b, col)
+        return st, t
+
+    return step
+
+
+@functools.lru_cache(maxsize=16)
+def make_engine(cyc: TimingCycles):
+    """Build the jitted resolver for one timing configuration.
+
+    Returns ``fn(streams)`` where ``streams`` is int32 ``(C, N, 4)`` and the
+    result is ``(issue (C, N) int32, total (C,) int32)``.
+    """
+    step = _build_step(cyc)
+    nb = cyc.num_banks
+
+    def run_one(stream):
+        st0 = _fresh_state(nb)
+        st, issue = jax.lax.scan(step, st0, stream)
+        return issue, st["drain"]
+
+    batched = jax.jit(jax.vmap(run_one))
+
+    def fn(streams: np.ndarray):
+        streams = jnp.asarray(streams, dtype=I32)
+        issue, total = batched(streams)
+        return np.asarray(issue), np.asarray(total)
+
+    return fn
+
+
+def run_fleet(cyc: TimingCycles,
+              stream_sets: list[list[np.ndarray]]
+              ) -> list[np.ndarray]:
+    """Resolve many simulations in one vmapped engine call.
+
+    ``stream_sets`` is a list of per-channel stream lists (one entry per
+    design/workload point).  All streams are padded to a common length
+    and resolved as a single (n_points*n_channels)-wide batch — the
+    "simulation fleet" axis of DESIGN.md §2.1 (on TPU this is the
+    data-parallel axis of the design-space sweep).
+
+    Returns the per-point total-cycle arrays (n_channels,).
+    """
+    flat = [s for ss in stream_sets for s in ss]
+    counts = [len(ss) for ss in stream_sets]
+    if not flat:
+        return []
+    batch = C.pad_streams(flat)
+    _, totals = run_streams(cyc, batch)
+    out = []
+    i = 0
+    for n in counts:
+        out.append(totals[i:i + n])
+        i += n
+    return out
+
+
+def run_streams(cyc: TimingCycles, streams) -> tuple[np.ndarray, np.ndarray]:
+    """Resolve a list/array of per-channel streams; pads to equal length."""
+    if isinstance(streams, list):
+        streams = C.pad_streams(streams)
+    if streams.ndim == 2:
+        streams = streams[None]
+    n = streams.shape[1]
+    # Bucket lengths to powers of two to bound recompilation.
+    bucket = 1 << max(4, (n - 1).bit_length())
+    if bucket != n:
+        pad = np.zeros((streams.shape[0], bucket - n, 4), dtype=np.int32)
+        streams = np.concatenate([np.asarray(streams), pad], axis=1)
+    issue, total = make_engine(cyc)(streams)
+    return issue[:, :n], total

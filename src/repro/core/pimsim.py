@@ -1,0 +1,77 @@
+"""LP5X-PIM Sim — top-level simulator API (the paper's Fig. 1 box).
+
+``PimSimulator`` is the user-facing facade over the HW model (timing
+engine, memory controller, device model) and the SW model (PIM Kernel:
+Data Mapper + Executor).  Benchmarks, the serving offload planner and the
+examples all talk to this class.
+"""
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+
+from repro.core.timing import DEFAULT_SYSTEM, SystemSpec
+from repro.pimkernel.executor import PimExecutor, PimResult
+from repro.pimkernel.tileconfig import ALL_DTYPES, PimDType
+
+
+class PimSimulator:
+    def __init__(self, spec: SystemSpec | None = None):
+        self.spec = spec or DEFAULT_SYSTEM
+        self.executor = PimExecutor(self.spec)
+        self._cache: dict = {}
+
+    # ------------------------------------------------------------------
+    def gemv(self, H: int, W: int, dtype: PimDType | str,
+             fence: bool = False, reshape: bool = False,
+             flush: str = "bus") -> PimResult:
+        dtype = PimDType.parse(dtype) if isinstance(dtype, str) else dtype
+        key = ("pim", H, W, dtype, fence, reshape, flush)
+        if key not in self._cache:
+            self._cache[key] = self.executor.run_gemv(
+                H, W, dtype, fence=fence, reshape=reshape, flush=flush)
+        return self._cache[key]
+
+    def baseline(self, H: int, W: int, dtype: PimDType | str) -> PimResult:
+        dtype = PimDType.parse(dtype) if isinstance(dtype, str) else dtype
+        key = ("base", H, W, dtype)
+        if key not in self._cache:
+            self._cache[key] = self.executor.run_baseline(H, W, dtype)
+        return self._cache[key]
+
+    def speedup(self, H: int, W: int, dtype: PimDType | str,
+                fence: bool = False, reshape: bool = False) -> float:
+        """PIM speedup vs sequential-weight-read baseline (Fig. 4)."""
+        return (self.baseline(H, W, dtype).ns
+                / self.gemv(H, W, dtype, fence=fence, reshape=reshape).ns)
+
+    def gemv_functional(self, weights: np.ndarray, x: np.ndarray,
+                        dtype: PimDType | str, **kw):
+        dtype = PimDType.parse(dtype) if isinstance(dtype, str) else dtype
+        return self.executor.run_gemv_functional(weights, x, dtype, **kw)
+
+    # ------------------------------------------------------------------
+    def sweep(self, dims: list[int], dtypes=None, axis: str = "activation",
+              base_dim: int = 4096, fence: bool = False,
+              reshape: bool = False) -> dict:
+        """Paper Fig. 4 sweeps: vary one dimension, fix the other at 4096.
+
+        axis='activation' varies W (input dim, top panels); axis='output'
+        varies H (bottom panels).
+        """
+        dtypes = dtypes or ALL_DTYPES
+        out: dict = {}
+        for dt in dtypes:
+            row = []
+            for d in dims:
+                H, W = (base_dim, d) if axis == "activation" else (d, base_dim)
+                row.append(self.speedup(H, W, dt, fence=fence,
+                                        reshape=reshape))
+            out[dt.name] = row
+        return out
+
+
+@functools.lru_cache(maxsize=4)
+def default_simulator() -> PimSimulator:
+    return PimSimulator()

@@ -1,0 +1,111 @@
+"""HLO-text analysis: collective-traffic extraction for the roofline.
+
+``compiled.cost_analysis()`` gives FLOPs/bytes but not collective traffic,
+so we parse the (optimized) HLO text: every all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute contributes its output
+byte size.  Ops inside ``while`` bodies (the layer scan) execute
+``trip_count`` times — the caller passes the scan length and any
+computation reachable from a while body is scaled by it.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COMP_RE = re.compile(r"^\s*%?([\w\.\-]+)\s*(?:\([^)]*\))?\s*->", re.M)
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """Total bytes of a shape string like 'bf16[8,128]' or a tuple."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+def parse_collectives(hlo_text: str) -> dict:
+    """Per-computation *transferred-byte* estimates per collective kind.
+
+    Per-device transfer conventions (ring algorithms, n large):
+      all-gather          ~ output bytes
+      reduce-scatter      ~ operand bytes (= output x n)
+      all-reduce          ~ 2 x output bytes (reduce-scatter + all-gather)
+      all-to-all          ~ output bytes
+      collective-permute  ~ output bytes
+
+    Returns {computation_name: {op_kind: bytes}}.
+    """
+    per_comp: dict = defaultdict(lambda: defaultdict(int))
+    comp = "main"
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        if stripped.startswith("%") and "{" in stripped and "->" in stripped:
+            m = re.match(r"%([\w\.\-]+)", stripped)
+            if m:
+                comp = m.group(1)
+            continue
+        if stripped.startswith("ENTRY"):
+            comp = "main"
+            continue
+        for kind in COLLECTIVES:
+            token = None
+            for suffix in ("(", "-start("):
+                if f" {kind}{suffix}" in stripped:
+                    token = f" {kind}{suffix}"
+                    break
+            if token is None:
+                continue
+            eq = stripped.split("=", 1)
+            if len(eq) != 2:
+                continue
+            out_part, _, rest = eq[1].partition(token)
+            operand_part = rest.split("),", 1)[0]
+            out_b = _shape_bytes(out_part)
+            in_b = _shape_bytes(operand_part)
+            if kind == "reduce-scatter":
+                nbytes = in_b or out_b
+            elif kind == "all-reduce":
+                nbytes = 2 * out_b
+            else:
+                nbytes = out_b
+            per_comp[comp][kind] += nbytes
+            break
+    return {k: dict(v) for k, v in per_comp.items()}
+
+
+def collective_bytes(hlo_text: str, scan_trip_count: int = 1) -> dict:
+    """Aggregate collective bytes; while-body computations x trip count.
+
+    Heuristic: computations whose name contains 'while' or 'body' or
+    'scan' belong to the layer scan.  Returns per-kind and total bytes.
+    """
+    per_comp = parse_collectives(hlo_text)
+    total = defaultdict(int)
+    for comp, kinds in per_comp.items():
+        mult = scan_trip_count if re.search(
+            r"while|body|scan|cond", comp) else 1
+        for kind, nbytes in kinds.items():
+            total[kind] += nbytes * mult
+    out = dict(total)
+    out["total"] = sum(total.values())
+    return out
+
+
+def count_op(hlo_text: str, opname: str) -> int:
+    return hlo_text.count(f" {opname}(")

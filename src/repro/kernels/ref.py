@@ -1,0 +1,88 @@
+"""Pure-jnp oracles for the PIM-tile quantized GEMV/GEMM kernels.
+
+The numerics contract shared with the Pallas kernels:
+
+* int paths (W8/W4 x A8/A16/A4): exact integer MACs into int32, then a
+  single dequantization ``y = acc * w_scale[row] * x_scale`` in float32.
+* fp paths (fp8-e4m3 weights x fp8/bf16 activations): operands upcast to
+  float32, accumulated in float32 (no scales).
+
+W4 weights travel *packed*, two signed nibbles per int8 byte
+(little-nibble = even column), exactly the byte layout the Data Mapper
+writes to DRAM — the kernels unpack in-register, mirroring how the PIM
+MAC unit consumes a 32 B burst.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def pack_w4(q) -> jnp.ndarray:
+    """(H, W) int values in [-8, 7] -> (H, W//2) packed int8."""
+    q = jnp.asarray(q, jnp.int8)
+    assert q.shape[-1] % 2 == 0
+    lo = q[..., 0::2] & 0xF
+    hi = q[..., 1::2] & 0xF
+    return (lo | (hi << 4)).astype(jnp.int8)
+
+
+def unpack_w4(packed) -> jnp.ndarray:
+    """(..., W//2) packed int8 -> (..., W) int8 (sign-extended nibbles)."""
+    p = jnp.asarray(packed, jnp.int8)
+    lo = jnp.left_shift(p, 4)
+    lo = jnp.right_shift(lo, 4)                 # arithmetic: sign-extend
+    hi = jnp.right_shift(p, 4)
+    out = jnp.stack([lo, hi], axis=-1)
+    return out.reshape(*p.shape[:-1], p.shape[-1] * 2)
+
+
+def quantize_weights(w, w_bits: int = 8):
+    """Symmetric per-row quantization: returns (q, scale[H]) with q int8.
+
+    For w_bits=4 the caller packs with :func:`pack_w4`.
+    """
+    w = jnp.asarray(w, jnp.float32)
+    qmax = 2 ** (w_bits - 1) - 1
+    scale = jnp.max(jnp.abs(w), axis=-1, keepdims=True) / qmax
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(w / scale), -qmax - 1, qmax).astype(jnp.int8)
+    return q, scale[:, 0]
+
+
+def quantize_acts(x, a_bits: int = 8):
+    """Symmetric per-tensor activation quantization -> (q, scale)."""
+    x = jnp.asarray(x, jnp.float32)
+    qmax = 2 ** (a_bits - 1) - 1
+    scale = jnp.maximum(jnp.max(jnp.abs(x)) / qmax, 1e-12)
+    q = jnp.clip(jnp.round(x / scale), -qmax - 1, qmax)
+    dtype = jnp.int8 if a_bits <= 8 else jnp.int16
+    return q.astype(dtype), scale
+
+
+def ref_gemv_int(wq, x_q, w_scale, x_scale, w_bits: int = 8) -> jnp.ndarray:
+    """Oracle for the int GEMV: (H,[W or W/2]) x (W,) -> f32 (H,)."""
+    w = unpack_w4(wq) if w_bits == 4 else jnp.asarray(wq, jnp.int8)
+    acc = jnp.dot(w.astype(jnp.int32), jnp.asarray(x_q).astype(jnp.int32))
+    return acc.astype(jnp.float32) * jnp.asarray(w_scale, jnp.float32) \
+        * jnp.asarray(x_scale, jnp.float32)
+
+
+def ref_gemm_int(wq, xb_q, w_scale, x_scale, w_bits: int = 8) -> jnp.ndarray:
+    """Oracle for the batched int GEMM: (B, W) x (H, W) -> f32 (B, H)."""
+    w = unpack_w4(wq) if w_bits == 4 else jnp.asarray(wq, jnp.int8)
+    acc = jnp.dot(jnp.asarray(xb_q).astype(jnp.int32),
+                  w.astype(jnp.int32).T)
+    return acc.astype(jnp.float32) * jnp.asarray(w_scale, jnp.float32)[None] \
+        * jnp.asarray(x_scale, jnp.float32)
+
+
+def ref_gemv_fp(w_fp8, x) -> jnp.ndarray:
+    """Oracle for the fp path: fp8 weights x fp8/bf16 acts -> f32."""
+    w = jnp.asarray(w_fp8).astype(jnp.float32)
+    return jnp.dot(w, jnp.asarray(x).astype(jnp.float32))
+
+
+def ref_gemm_fp(w_fp8, xb) -> jnp.ndarray:
+    w = jnp.asarray(w_fp8).astype(jnp.float32)
+    return jnp.dot(jnp.asarray(xb).astype(jnp.float32), w.T)

@@ -1,0 +1,91 @@
+"""Weight quantization for serving (the paper's W8/W4 formats on TPU).
+
+LP5X-PIM wins by streaming quantized weights; the TPU serving analogue is
+storing matmul weights as int8 (or nibble-packed int4) + per-output-channel
+scales and dequantizing on use — HBM reads shrink 2x/4x, which is exactly
+the dominant roofline term of the TP decode cells (§Perf iteration 2).
+
+``quantize_params`` transforms the bf16/f32 parameter tree: every large
+matmul leaf becomes ``{"q": int8[...], "s": f32[..., 1, out]}``; the
+models dequantize on use (XLA fuses the convert into the consumer, so HBM
+reads stay int8).  Numerics mirror ``kernels/ref.py`` (symmetric,
+per-output-channel).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# parameter names that get quantized (2D+ matmul weights)
+QUANT_KEYS = {"embed", "lm_head", "patch_proj", "wq", "wk", "wv", "wo",
+              "wi", "wg", "in_proj", "out_proj"}
+
+
+def is_bundle(x) -> bool:
+    return isinstance(x, dict) and set(x.keys()) == {"q", "s"}
+
+
+def _quantize_leaf(w, w_bits: int):
+    w = jnp.asarray(w, jnp.float32)
+    qmax = 2 ** (w_bits - 1) - 1
+    scale = jnp.max(jnp.abs(w), axis=-2, keepdims=True) / qmax
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(w / scale), -qmax - 1, qmax).astype(jnp.int8)
+    if w_bits == 4:
+        lo = q[..., 0::2, :] & 0xF
+        hi = q[..., 1::2, :] & 0xF
+        q = (lo | (hi << 4)).astype(jnp.int8)
+    return {"q": q, "s": scale.astype(jnp.float32)}
+
+
+def dequant_leaf(leaf, w_bits: int, dtype=jnp.bfloat16):
+    q = leaf["q"]
+    if w_bits == 4:
+        lo = jnp.right_shift(jnp.left_shift(q, 4), 4)
+        hi = jnp.right_shift(q, 4)
+        q = jnp.stack([lo, hi], axis=-2).reshape(
+            *q.shape[:-2], q.shape[-2] * 2, q.shape[-1])
+    return (q.astype(jnp.float32) * leaf["s"]).astype(dtype)
+
+
+def _walk(d, fn):
+    out = {}
+    for k, v in d.items():
+        if is_bundle(v):
+            out[k] = v
+        elif isinstance(v, dict):
+            out[k] = _walk(v, fn)
+        else:
+            out[k] = fn(k, v)
+    return out
+
+
+def quantize_params(params, w_bits: int = 8):
+    """bf16/f32 param tree -> serving tree with quantized matmul leaves."""
+    def fn(k, v):
+        if k in QUANT_KEYS and hasattr(v, "ndim") and v.ndim >= 2 and \
+                v.shape[-2] % 2 == 0:
+            return _quantize_leaf(v, w_bits)
+        return v
+    return _walk(params, fn)
+
+
+def dequant_tree(tree, w_bits: int = 8, dtype=jnp.bfloat16):
+    """Dequantize every {"q","s"} bundle in a (sub)tree on use."""
+    if is_bundle(tree):
+        return dequant_leaf(tree, w_bits, dtype)
+    if isinstance(tree, dict):
+        return {k: dequant_tree(v, w_bits, dtype)
+                for k, v in tree.items()}
+    if isinstance(tree, (tuple, list)):
+        return type(tree)(dequant_tree(v, w_bits, dtype) for v in tree)
+    return tree
+
+
+def quantize_logical(logical):
+    """Transform the logical-axis tree alongside quantize_params."""
+    def fn(k, v):
+        if k in QUANT_KEYS and isinstance(v, tuple) and len(v) >= 2:
+            return {"q": v, "s": v[:-2] + (None, v[-1])}
+        return v
+    return _walk(logical, fn)

@@ -1,0 +1,4 @@
+"""PIM Kernel software layer (paper §2.2): Data Mapper + PIM Executor."""
+from .tileconfig import PimDType, TileConfig, ALL_DTYPES  # noqa: F401
+from .datamapper import DataMapper, PimLayout  # noqa: F401
+from .executor import PimExecutor, PimResult  # noqa: F401

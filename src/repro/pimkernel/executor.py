@@ -1,0 +1,124 @@
+"""PIM Executor (paper §2.2): runtime orchestration.
+
+Glues Code Gen + PIM Control + GEMV Kernel over a Data-Mapper layout and
+runs the result through the cycle engine (timing view) and optionally the
+functional device model (behavioral view).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core import commands as C
+from repro.core import controller, device, engine
+from repro.core.energy import EnergyParams, gemv_energy_summary
+from repro.core.timing import SystemSpec
+from . import codegen
+from .datamapper import DataMapper, PimLayout
+from .gemv import GemvKernel, GemvStreams
+from .tileconfig import PimDType, TileConfig
+
+
+@dataclasses.dataclass
+class PimResult:
+    cycles: int                 # max over channels
+    ns: float
+    flops: int
+    weight_bytes: int
+    utilization: float
+    split: int
+    energy: dict
+    counts: np.ndarray          # aggregated opcode histogram
+    meta: dict
+
+    @property
+    def gflops(self) -> float:
+        return self.flops / max(self.ns, 1e-9)
+
+
+class PimExecutor:
+    """Runtime control for GEMV offload on LP5X-PIM."""
+
+    def __init__(self, spec: SystemSpec,
+                 energy_params: EnergyParams | None = None):
+        self.spec = spec
+        self.cyc = spec.derive_cycles()
+        self.mapper = DataMapper(spec)
+        self.kernel = GemvKernel(spec)
+        self.energy_params = energy_params or EnergyParams()
+
+    # -- paper pipeline -------------------------------------------------
+    def plan(self, H: int, W: int, dtype: PimDType,
+             reshape: bool = False) -> tuple[PimLayout, codegen.PimProgram]:
+        layout = self.mapper.layout(H, W, dtype, reshape=reshape)
+        program = codegen.synthesize(layout.tc, self.spec.pim)
+        return layout, program
+
+    def build_streams(self, layout: PimLayout, program: codegen.PimProgram,
+                      x: np.ndarray | None = None,
+                      fence: bool = False,
+                      flush: str = "bus") -> GemvStreams:
+        return self.kernel.build(layout, program, x=x, fence=fence,
+                                 flush=flush)
+
+    def time_streams(self, gs: GemvStreams) -> PimResult:
+        issue, totals = engine.run_streams(self.cyc, gs.streams)
+        cycles = int(totals.max()) if totals.size else 0
+        counts = sum((C.op_counts(s) for s in gs.streams),
+                     np.zeros(C.NUM_OPCODES, dtype=np.int64))
+        active = max(1, int(round(16 * gs.layout.utilization)))
+        energy = gemv_energy_summary(gs.streams, totals, self.spec,
+                                     gs.meta["flops"], self.energy_params,
+                                     active_banks=active)
+        return PimResult(
+            cycles=cycles,
+            ns=cycles * self.cyc.tck_ns,
+            flops=gs.meta["flops"],
+            weight_bytes=gs.meta["weight_bytes"],
+            utilization=gs.meta["utilization"],
+            split=gs.meta["split"],
+            energy=energy,
+            counts=counts,
+            meta=gs.meta,
+        )
+
+    def run_gemv(self, H: int, W: int, dtype: PimDType,
+                 fence: bool = False, reshape: bool = False,
+                 flush: str = "bus") -> PimResult:
+        """Timing-only GEMV simulation (the Fig. 4 path)."""
+        layout, program = self.plan(H, W, dtype, reshape=reshape)
+        gs = self.build_streams(layout, program, fence=fence, flush=flush)
+        return self.time_streams(gs)
+
+    def run_gemv_functional(self, weights: np.ndarray, x: np.ndarray,
+                            dtype: PimDType, fence: bool = False,
+                            reshape: bool = False
+                            ) -> tuple[np.ndarray, PimResult]:
+        """Full HW/SW co-simulation: returns (y, timing result)."""
+        H, W = weights.shape
+        layout, program = self.plan(H, W, dtype, reshape=reshape)
+        dram = self.mapper.pack(layout, weights)
+        gs = self.build_streams(layout, program, x=x, fence=fence)
+        y = device.execute_gemv(layout, program, dram, gs.streams,
+                                gs.payloads)
+        return y, self.time_streams(gs)
+
+    # -- non-PIM baseline (Fig. 4 normalization) --------------------------
+    def run_baseline(self, H: int, W: int, dtype: PimDType) -> PimResult:
+        """Sequential weight read on a non-PIM system (4 channels)."""
+        total_bytes = H * W * dtype.w_bits // 8
+        per_ch = -(-total_bytes // self.spec.num_channels)
+        stream = controller.sequential_read_stream(per_ch, self.spec)
+        streams = [stream] * self.spec.num_channels
+        issue, totals = engine.run_streams(self.cyc, [stream])
+        cycles = int(totals.max())
+        counts = C.op_counts(stream) * self.spec.num_channels
+        energy = gemv_energy_summary(streams, [cycles] * len(streams),
+                                     self.spec, 2 * H * W,
+                                     self.energy_params)
+        return PimResult(cycles=cycles, ns=cycles * self.cyc.tck_ns,
+                         flops=2 * H * W,
+                         weight_bytes=total_bytes,
+                         utilization=1.0, split=1, energy=energy,
+                         counts=counts, meta=dict(kind="baseline"))

@@ -1,0 +1,153 @@
+"""GEMV Kernel (paper §2.2, PIM Executor sub-component 3).
+
+"Executes General Matrix-Vector Multiplication on a per-tile basis using
+the specialized PIM ISA and manages pipeline flush-out operations."
+
+Given a :class:`PimLayout` (Data Mapper) and a :class:`PimProgram` (Code
+Gen) this module synthesizes the per-channel command streams:
+
+    MODE_MB · IRF setup
+    per round:   per chunk:  [FENCE] · chunk config · SRF broadcast fill
+                             ACT_MB/MAC sweep (row-buffer aware) · PRE_MB
+                 [FENCE] · ACC flush-out (RD_ACC per active bank)
+    MODE_SB
+
+The same structure drives both the timing engine (issue cycles) and the
+functional device interpreter (`core/device.py`), which is what ties the
+HW and SW models together "organically" as the paper puts it: one command
+stream, two views.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core import commands as C
+from repro.core.commands import StreamBuilder
+from repro.core.timing import SystemSpec
+from . import codegen
+from .control import FencePolicy, PimControl
+from .datamapper import PimLayout
+
+BURST = 32
+
+
+@dataclasses.dataclass
+class GemvStreams:
+    """Per-channel command streams + WR_SRF payload side-band."""
+
+    streams: list[np.ndarray]
+    payloads: list[dict[int, np.ndarray]]
+    layout: PimLayout
+    meta: dict
+
+
+class GemvKernel:
+    def __init__(self, spec: SystemSpec):
+        self.spec = spec
+
+    def build(self, layout: PimLayout, program: codegen.PimProgram,
+              x: np.ndarray | None = None,
+              fence: bool = False, flush: str = "bus") -> GemvStreams:
+        """Synthesize command streams (and payloads when ``x`` given).
+
+        ``flush``: "bus" reads accumulators to the host over the data
+        bus (RD_ACC); "dram" moves them into DRAM internally (MOV_ACC —
+        the paper's "accumulation register-to-DRAM data movements"), the
+        host reading y later with normal SB reads.
+        """
+        tc = layout.tc
+        page = self.spec.timings.page_bytes
+        xpad = None
+        if x is not None:
+            xpad = np.zeros(layout.padded_w, dtype=np.asarray(x).dtype)
+            xpad[: layout.W] = x
+
+        streams, payloads = [], []
+        for ch in range(self.spec.num_channels):
+            b = StreamBuilder()
+            pay: dict[int, np.ndarray] = {}
+            ctl = PimControl(b, FencePolicy(per_tile=fence))
+            ch_rounds = [r for r in range(layout.rounds)
+                         if layout.active_banks(r, ch)]
+            if ch_rounds:
+                ctl.enter_mb()
+                b.emit_repeat(C.WR_IRF, program.setup_cmds, a=0, b=0)
+                for rnd in ch_rounds:
+                    self._round(b, pay, ctl, layout, program, rnd, ch,
+                                xpad, page, flush)
+                ctl.enter_sb()
+            streams.append(b.build())
+            payloads.append(pay)
+
+        meta = dict(
+            flops=layout.flops,
+            weight_bytes=layout.weight_bytes,
+            utilization=layout.utilization,
+            split=layout.split,
+            rounds=layout.rounds,
+            tiles=layout.n_htiles * layout.n_wtiles,
+        )
+        return GemvStreams(streams, payloads, layout, meta)
+
+    # ------------------------------------------------------------------
+    def _round(self, b: StreamBuilder, pay: dict, ctl: PimControl,
+               layout: PimLayout, program: codegen.PimProgram, rnd: int,
+               ch: int, xpad, page: int, flush: str = "bus") -> None:
+        tc = layout.tc
+        banks = layout.active_banks(rnd, ch)
+        quads = sorted({bank % 4 for _, bank in banks})
+        open_row = -1
+
+        for chunk in range(layout.group_w):
+            groups = layout.active_groups(rnd, chunk)
+            if not groups:
+                continue
+            ctl.tile_begin()
+            # chunk re-config (marks chunk start for the interpreter:
+            # b-field 1 = chunk-start flag, c-field = chunk index).
+            b.emit(C.WR_IRF, a=rnd % (1 << 15), b=1, c=chunk)
+            if program.chunk_cfg_cmds > 1:
+                b.emit_repeat(C.WR_IRF, program.chunk_cfg_cmds - 1,
+                              a=0, b=0)
+            # SRF broadcast fill, one pass per split group.
+            for g in groups:
+                w_tile = layout.w_tile_at(g, chunk)
+                if xpad is not None:
+                    seg = xpad[w_tile * tc.t_w:(w_tile + 1) * tc.t_w]
+                    raw = codegen.encode_acts(seg, tc.dtype)
+                    raw = np.pad(raw, (0, tc.srf_wr_cmds * BURST - raw.size))
+                for j in range(tc.srf_wr_cmds):
+                    if xpad is not None:
+                        pay[len(b)] = raw[j * BURST:(j + 1) * BURST]
+                    b.emit(C.WR_SRF, a=g, b=j)
+            # MAC sweep over the tile bytes, row-buffer aware.
+            n_bursts = layout.max_bursts(rnd, chunk)
+            off = layout.chunk_offset(rnd, chunk)
+            emitted = 0
+            while emitted < n_bursts:
+                row = off // page
+                if row != open_row:
+                    if open_row >= 0:
+                        b.emit(C.PRE_MB)
+                    for q in quads:
+                        b.emit(C.ACT_MB, a=q, b=row)
+                    open_row = row
+                col0 = (off % page) // BURST
+                n = min(n_bursts - emitted, page // BURST - col0)
+                b.emit_repeat(C.MAC, n, a=0, b=row, c_start=col0)
+                emitted += n
+                off += n * BURST
+            ctl.tile_end()
+        # Flush-out: close rows, move accumulators out of the blocks.
+        ctl.flush_boundary()
+        if open_row >= 0:
+            b.emit(C.PRE_MB)
+        if flush == "dram":
+            # internal ACC->DRAM move (broadcast, no data-bus usage);
+            # the host reads y later with standard SB-mode reads.
+            b.emit_repeat(C.MOV_ACC, tc.acc_rd_cmds)
+        else:
+            for rank, bank in banks:
+                b.emit_repeat(C.RD_ACC, tc.acc_rd_cmds, a=bank, b=rank)

@@ -1,0 +1,118 @@
+"""Batched serving engine: continuous batching over KV-cache slots.
+
+Requests enter a waiting queue, get prefilled into a free slot, and the
+decode loop steps every active slot in one batched ``decode_step`` call
+(one batch of GEMVs per projection — the PIM offload unit).  Finished
+slots (EOS or max tokens) free immediately and the next waiting request
+takes over — continuous batching, the production serving pattern.
+
+The engine also carries the PIM telemetry: per decode step it asks the
+OffloadPlanner what the step would cost on a host-only vs PIM-offloaded
+LPDDR5X system (the paper's motivating use case: on-device LLM decode).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models import model as M
+from .offload import OffloadPlanner
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray            # (S,) int32
+    max_new: int = 16
+    eos: int = -1
+    out: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServingEngine:
+    def __init__(self, cfg: ArchConfig, params, slots: int = 4,
+                 max_seq: int = 256, planner: Optional[OffloadPlanner]
+                 = None):
+        assert cfg.input_mode == "tokens", "engine serves token models"
+        self.cfg, self.params = cfg, params
+        self.slots = slots
+        self.max_seq = max_seq
+        self.cache = M.init_cache(cfg, slots, max_seq, jnp.float32)
+        self.active: list[Optional[Request]] = [None] * slots
+        self.pos = np.zeros(slots, dtype=np.int32)
+        self.waiting: list[Request] = []
+        self.planner = planner
+        self.stats = dict(steps=0, tokens=0, prefills=0)
+
+        self._decode = jax.jit(
+            lambda p, c, t, pos: M.decode_step(cfg, p, c, t, pos))
+
+    # ------------------------------------------------------------------
+    def submit(self, req: Request):
+        self.waiting.append(req)
+
+    def _admit(self):
+        for slot in range(self.slots):
+            if self.active[slot] is None and self.waiting:
+                req = self.waiting.pop(0)
+                self._prefill(slot, req)
+                self.active[slot] = req
+
+    def _prefill(self, slot: int, req: Request):
+        """Single-slot prefill into the batched cache (slot-masked)."""
+        s = len(req.prompt)
+        assert s < self.max_seq
+        prompt = jnp.asarray(req.prompt, jnp.int32)[None]
+        tmp_cache = M.init_cache(self.cfg, 1, self.max_seq, jnp.float32)
+        logits, tmp_cache = M.prefill(self.cfg, self.params,
+                                      {"tokens": prompt}, tmp_cache)
+        # merge the single-row cache into the batched cache at `slot`
+        def merge(full, one):
+            return full.at[:, slot:slot + 1].set(one)
+        self.cache = jax.tree.map(merge, self.cache, tmp_cache)
+        self.pos[slot] = s
+        tok = int(jnp.argmax(logits[0]))
+        req.out.append(tok)
+        self.stats["prefills"] += 1
+
+    # ------------------------------------------------------------------
+    def step(self):
+        """One batched decode step over all active slots."""
+        self._admit()
+        act = [i for i, r in enumerate(self.active) if r is not None]
+        if not act:
+            return False
+        tokens = np.zeros((self.slots, 1), dtype=np.int32)
+        for i in act:
+            tokens[i, 0] = self.active[i].out[-1]
+        # one position per slot (ragged decode positions)
+        pos = jnp.asarray(self.pos, jnp.int32)
+        logits, self.cache = self._decode(self.params, self.cache,
+                                          jnp.asarray(tokens), pos)
+        for i in act:
+            req = self.active[i]
+            tok = int(jnp.argmax(logits[i]))
+            req.out.append(tok)
+            self.pos[i] += 1
+            self.stats["tokens"] += 1
+            if (tok == req.eos or len(req.out) >= req.max_new
+                    or self.pos[i] >= self.max_seq - 1):
+                req.done = True
+                self.active[i] = None
+        self.stats["steps"] += 1
+        return True
+
+    def run(self, max_steps: int = 1000) -> dict:
+        while (any(self.active) or self.waiting) and max_steps > 0:
+            self.step()
+            max_steps -= 1
+        out = dict(self.stats)
+        if self.planner is not None:
+            out["pim_telemetry"] = self.planner.decode_speedup(
+                batch=max(1, self.slots))
+        return out

@@ -1,0 +1,117 @@
+"""Training loop: microbatched gradient accumulation, compression,
+async checkpointing, fault hooks.
+
+The step function keeps the accumulation loop *inside* jit as a
+``lax.scan`` over microbatches: XLA overlaps each microbatch's
+reduce-scatter/all-gather traffic with the next microbatch's compute
+(compute/comm overlap without manual double buffering).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import model as M
+from . import checkpoint as CKPT
+from .fault import StragglerDetector
+from .grad_compress import (CompressionConfig, apply_with_error_feedback,
+                            init_error_state)
+from .optimizer import adamw_init, adamw_update, cosine_schedule
+
+PyTree = Any
+
+
+@dataclasses.dataclass
+class TrainConfig:
+    lr: float = 3e-4
+    warmup: int = 100
+    total_steps: int = 1000
+    microbatches: int = 1
+    compression: CompressionConfig = dataclasses.field(
+        default_factory=lambda: CompressionConfig("none"))
+    ckpt_every: int = 100
+    ckpt_dir: str = "checkpoints"
+    remat: bool = True
+
+
+def make_train_step(cfg: ArchConfig, tcfg: TrainConfig):
+    """(params, opt, err, batch, step) -> (params, opt, err, metrics)."""
+
+    def step_fn(params, opt, err, batch, step):
+        nmb = tcfg.microbatches
+
+        def one_micro(_, mb):
+            def lf(p):
+                return M.loss_fn(cfg, p, mb, remat=tcfg.remat)[0]
+            return None, jax.value_and_grad(lf)(params)
+
+        if nmb > 1:
+            mbs = jax.tree.map(
+                lambda x: x.reshape(nmb, x.shape[0] // nmb, *x.shape[1:]),
+                batch)
+            _, (losses, grads) = jax.lax.scan(one_micro, None, mbs)
+            loss = losses.mean()
+            grads = jax.tree.map(lambda g: g.mean(0), grads)
+        else:
+            _, (loss, grads) = one_micro(None, batch)
+
+        grads, err = apply_with_error_feedback(grads, err,
+                                               tcfg.compression)
+        lr = cosine_schedule(step, tcfg.lr, tcfg.warmup, tcfg.total_steps)
+        params, opt = adamw_update(params, grads, opt, lr=lr)
+        return params, opt, err, dict(loss=loss, lr=lr)
+
+    return step_fn
+
+
+class Trainer:
+    def __init__(self, cfg: ArchConfig, tcfg: TrainConfig, params=None,
+                 key=None):
+        self.cfg, self.tcfg = cfg, tcfg
+        key = key if key is not None else jax.random.PRNGKey(0)
+        self.params = params if params is not None else \
+            M.init_params(cfg, key)
+        self.opt = adamw_init(self.params)
+        self.err = init_error_state(self.params)
+        self.step = 0
+        self.step_fn = jax.jit(make_train_step(cfg, tcfg),
+                               donate_argnums=(0, 1, 2))
+        self.ckpt = CKPT.AsyncCheckpointer(tcfg.ckpt_dir)
+        self.straggler = StragglerDetector()
+        self.history: list[dict] = []
+
+    def restore_latest(self) -> bool:
+        latest = CKPT.latest_step(self.tcfg.ckpt_dir)
+        if latest is None:
+            return False
+        (self.params, self.opt), manifest = CKPT.restore(
+            self.tcfg.ckpt_dir, (self.params, self.opt))
+        self.step = manifest["step"]
+        return True
+
+    def train(self, batches, steps: int, log_every: int = 10) -> list:
+        for _ in range(steps):
+            batch = next(batches)
+            t0 = time.perf_counter()
+            self.params, self.opt, self.err, metrics = self.step_fn(
+                self.params, self.opt, self.err, batch,
+                jnp.asarray(self.step, jnp.int32))
+            loss = float(metrics["loss"])
+            dt = time.perf_counter() - t0
+            self.straggler.observe(self.step, dt)
+            self.step += 1
+            rec = dict(step=self.step, loss=loss, dt=dt)
+            self.history.append(rec)
+            if self.step % log_every == 0:
+                print(f"step {self.step:5d} loss {loss:.4f} "
+                      f"({dt*1e3:.0f} ms)", flush=True)
+            if self.step % self.tcfg.ckpt_every == 0:
+                self.ckpt.save(self.step, (self.params, self.opt))
+        self.ckpt.wait()
+        return self.history

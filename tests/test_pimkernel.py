@@ -1,0 +1,188 @@
+"""PIM Kernel software-layer tests: address-mapping bijectivity, Data
+Mapper pack/unpack round trip, codegen, end-to-end behavioral fidelity
+(command streams interpreted by the device model == numpy GEMV)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.pimsim import PimSimulator
+from repro.core.timing import DEFAULT_SYSTEM, PimSpec, SystemSpec
+from repro.pimkernel import addrmap, codegen
+from repro.pimkernel.datamapper import DataMapper
+from repro.pimkernel.tileconfig import ALL_DTYPES, PimDType, TileConfig
+
+SPEC = DEFAULT_SYSTEM
+
+
+# --- address mapping ----------------------------------------------------
+
+def test_block_id_bijection():
+    n = addrmap.num_blocks(SPEC)
+    seen = set()
+    for blk in range(n):
+        ch, rank, bank = addrmap.block_of(blk, SPEC)
+        assert addrmap.block_id_of(ch, rank, bank, SPEC) == blk
+        seen.add((ch, rank, bank))
+    assert len(seen) == n
+
+
+def test_vertical_mapping_channel_first():
+    """Consecutive h-tiles rotate channels first (paper §2.3)."""
+    chans = [addrmap.block_of(i, SPEC)[0] for i in range(8)]
+    assert chans[:4] == [0, 1, 2, 3]
+
+
+@settings(max_examples=50, deadline=None)
+@given(h_tile=st.integers(0, 300), w_tile=st.integers(0, 60),
+       n_wtiles=st.integers(1, 61), split=st.integers(1, 4))
+def test_tile_addresses_disjoint(h_tile, w_tile, n_wtiles, split):
+    """Two distinct tiles never share (block, offset)."""
+    if w_tile >= n_wtiles:
+        w_tile = w_tile % n_wtiles
+    tb = 4096
+    a = addrmap.tile_address(h_tile, w_tile, n_wtiles, tb, SPEC, split)
+    b = addrmap.tile_address(h_tile, (w_tile + 1) % n_wtiles, n_wtiles,
+                             tb, SPEC, split)
+    if n_wtiles > 1:
+        assert (a.channel, a.rank, a.bank, a.byte_offset) != \
+            (b.channel, b.rank, b.bank, b.byte_offset)
+
+
+# --- tile config --------------------------------------------------------
+
+def test_tile_shapes_match_paper_grouping():
+    pim = SPEC.pim
+    tw = {d: TileConfig.make(d, pim).t_w for d in ALL_DTYPES}
+    large = [PimDType.W8A8, PimDType.W4A4, PimDType.FP_W8A8]
+    small = [PimDType.W8A16, PimDType.W4A16, PimDType.FP_W8A16]
+    assert min(tw[d] for d in large) > max(tw[d] for d in small)
+    assert all(TileConfig.make(d, pim).t_h == pim.acc_regs
+               for d in ALL_DTYPES)
+
+
+# --- data mapper --------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [PimDType.W8A8, PimDType.W4A16],
+                         ids=lambda d: d.name)
+@pytest.mark.parametrize("reshape", [False, True])
+def test_pack_unpack_roundtrip(dtype, reshape):
+    rng = np.random.default_rng(1)
+    H, W = 200, 1500
+    m = 2 ** (dtype.w_bits - 1) - 1
+    w = rng.integers(-m - 1, m + 1, size=(H, W)).astype(np.int32)
+    dm = DataMapper(SPEC)
+    layout = dm.layout(H, W, dtype, reshape=reshape)
+    dram = dm.pack(layout, w)
+    back = dm.unpack(layout, dram)
+    assert np.array_equal(back[:H, :W], w)
+    assert (back[H:, :] == 0).all() and (back[:, W:] == 0).all()
+
+
+@settings(max_examples=20, deadline=None)
+@given(h=st.integers(1, 400), w=st.integers(1, 3000),
+       di=st.integers(0, len(ALL_DTYPES) - 1), reshape=st.booleans())
+def test_layout_covers_all_tiles(h, w, di, reshape):
+    """Every tile is placed exactly once; utilization in (0, 1]."""
+    dm = DataMapper(SPEC)
+    layout = dm.layout(h, w, ALL_DTYPES[di], reshape=reshape)
+    seen = set()
+    for ht in range(layout.n_htiles):
+        for g in range(layout.split):
+            logical = layout.logical_of(ht, g)
+            rnd, loc = layout.place(logical)
+            for c in range(layout.group_w):
+                wt = layout.w_tile_at(g, c)
+                if wt is not None:
+                    key = (loc, layout.chunk_offset(rnd, c))
+                    assert key not in seen
+                    seen.add(key)
+                    assert 0 <= wt < layout.n_wtiles
+    n_assigned = len({(layout.logical_of(ht, g), c)
+                      for ht in range(layout.n_htiles)
+                      for g in range(layout.split)
+                      for c in range(layout.group_w)
+                      if layout.w_tile_at(g, c) is not None})
+    assert n_assigned == layout.n_htiles * layout.n_wtiles
+    assert 0 < layout.utilization <= 1.0
+
+
+def test_reshape_activates_more_blocks():
+    dm = DataMapper(SPEC)
+    l0 = dm.layout(512, 4096, PimDType.W8A8, reshape=False)
+    l1 = dm.layout(512, 4096, PimDType.W8A8, reshape=True)
+    assert l1.split > 1
+    assert l1.utilization > l0.utilization
+
+
+# --- codegen ------------------------------------------------------------
+
+def test_irf_program_fits_and_covers():
+    for d in ALL_DTYPES:
+        tc = TileConfig.make(d, SPEC.pim)
+        prog = codegen.synthesize(tc, SPEC.pim)
+        assert len(prog) <= SPEC.pim.irf_entries
+        assert prog.acc_idx.shape[0] == tc.macs_per_tile
+        assert prog.acc_idx.max() == tc.t_h - 1
+        assert prog.srf_off.max() <= tc.t_w - prog.n_elems
+
+
+def test_fp8_encode_decode_roundtrip():
+    codes = np.arange(256, dtype=np.uint8)
+    vals = codegen._fp8_decode(codes)
+    finite = np.isfinite(vals)
+    back = codegen._fp8_encode(vals[finite])
+    np.testing.assert_array_equal(codegen._fp8_decode(back), vals[finite])
+
+
+# --- end-to-end behavioral fidelity ------------------------------------
+
+@pytest.mark.parametrize("dtype", ALL_DTYPES, ids=lambda d: d.name)
+def test_hwsw_cosim_matches_numpy(dtype):
+    """Command stream -> device interpreter == numpy GEMV (paper's
+    'consistent behavioral accuracy')."""
+    rng = np.random.default_rng(42)
+    H, W = 160, 1200
+    sim = PimSimulator()
+    if dtype.is_fp:
+        wmat = rng.integers(0, 256, size=(H, W)).astype(np.uint8)
+        x = (rng.standard_normal(W)).astype(np.float32)
+        y, res = sim.gemv_functional(wmat, x, dtype)
+        wd = codegen._fp8_decode(wmat).astype(np.float64)
+        xs = codegen.decode_srf(codegen.encode_acts(x, dtype), dtype)
+        ref = wd @ xs[:W].astype(np.float64)
+        np.testing.assert_allclose(y, ref, rtol=1e-9, atol=1e-6)
+    else:
+        wm = 2 ** (dtype.w_bits - 1) - 1
+        am = 2 ** (min(dtype.a_bits, 8) - 1) - 1
+        wmat = rng.integers(-wm - 1, wm + 1, size=(H, W)).astype(np.int32)
+        x = rng.integers(-am - 1, am + 1, size=(W,)).astype(np.int32)
+        y, res = sim.gemv_functional(wmat, x, dtype)
+        assert np.array_equal(y, wmat.astype(np.int64) @ x.astype(np.int64))
+    assert res.cycles > 0
+
+
+@pytest.mark.parametrize("reshape", [False, True])
+@pytest.mark.parametrize("fence", [False, True])
+def test_cosim_reshape_fence_variants(reshape, fence):
+    rng = np.random.default_rng(7)
+    H, W = 96, 2048
+    sim = PimSimulator()
+    wmat = rng.integers(-128, 128, size=(H, W)).astype(np.int32)
+    x = rng.integers(-128, 128, size=(W,)).astype(np.int32)
+    y, res = sim.gemv_functional(wmat, x, PimDType.W8A8,
+                                 reshape=reshape, fence=fence)
+    assert np.array_equal(y, wmat.astype(np.int64) @ x.astype(np.int64))
+    if reshape:
+        assert res.split > 1
+
+
+@settings(max_examples=10, deadline=None)
+@given(h=st.integers(1, 200), w=st.integers(1, 1200),
+       reshape=st.booleans())
+def test_cosim_random_geometry(h, w, reshape):
+    rng = np.random.default_rng(h * 10007 + w)
+    sim = PimSimulator()
+    wmat = rng.integers(-128, 128, size=(h, w)).astype(np.int32)
+    x = rng.integers(-128, 128, size=(w,)).astype(np.int32)
+    y, _ = sim.gemv_functional(wmat, x, PimDType.W8A8, reshape=reshape)
+    assert np.array_equal(y, wmat.astype(np.int64) @ x.astype(np.int64))

@@ -1,0 +1,99 @@
+"""End-to-end system behaviour tests.
+
+The integration points: simulator -> offload planner -> serving engine;
+trainer -> checkpoint -> elastic restart; paper-number regression gates.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, SHAPES, shapes_for, smoke_config
+from repro.core.pimsim import PimSimulator
+from repro.pimkernel.tileconfig import PimDType
+
+
+@pytest.fixture(scope="module")
+def sim():
+    return PimSimulator()
+
+
+class TestPaperClaims:
+    """Regression gates on the paper's published numbers (±10%)."""
+
+    def test_large_tile_speedups(self, sim):
+        for dt in (PimDType.W8A8, PimDType.W4A4, PimDType.FP_W8A8):
+            s = sim.speedup(4096, 4096, dt)
+            assert 5.5 <= s <= 6.8, (dt, s)
+
+    def test_small_tile_speedups(self, sim):
+        for dt in (PimDType.W8A16, PimDType.FP_W8A16, PimDType.W4A16):
+            s = sim.speedup(4096, 4096, dt)
+            assert 5.2 <= s <= 6.3, (dt, s)
+
+    def test_fenced_w4a16_drop(self, sim):
+        s = sim.speedup(4096, 4096, PimDType.W4A16, fence=True)
+        assert 3.7 <= s <= 4.8, s      # paper: 4.1x
+
+    def test_fenced_others_hold_5x(self, sim):
+        for dt in (PimDType.W8A8, PimDType.W4A4, PimDType.W8A16):
+            assert sim.speedup(4096, 4096, dt, fence=True) >= 5.0
+
+    def test_speedup_monotone_in_dims(self, sim):
+        for axis in ("activation", "output"):
+            sw = sim.sweep([1024, 2048, 4096, 8192],
+                           [PimDType.W8A8], axis=axis)["W8A8"]
+            assert all(b >= a - 0.02 for a, b in zip(sw, sw[1:])), (axis,
+                                                                    sw)
+
+    def test_reshape_gain_band(self, sim):
+        g = sim.gemv(1024, 4096, PimDType.W8A8).ns / \
+            sim.gemv(1024, 4096, PimDType.W8A8, reshape=True).ns
+        assert 1.4 <= g <= 1.9        # paper: up to 1.65x
+
+    def test_fences_never_help(self, sim):
+        for dt in PimDType:
+            assert sim.gemv(2048, 2048, dt, fence=True).ns >= \
+                sim.gemv(2048, 2048, dt).ns
+
+
+class TestEnergyModel:
+    def test_pim_saves_io_energy(self, sim):
+        p = sim.gemv(4096, 4096, PimDType.W8A8)
+        b = sim.baseline(4096, 4096, PimDType.W8A8)
+        assert p.energy["pj_per_op"] < b.energy["pj_per_op"]
+
+    def test_energy_positive_components(self, sim):
+        e = sim.gemv(1024, 1024, PimDType.W8A8).energy["channels"][0]
+        for k in ("act_pj", "io_pj", "mac_pj", "background_pj"):
+            assert e[k] >= 0
+        assert e["total_pj"] > 0
+
+
+class TestShapeMatrix:
+    def test_40_cells_defined(self):
+        cells = [(a, s) for a, c in ARCHS.items() for s in shapes_for(c)]
+        # 10 archs x 3 universal shapes + 3 sub-quadratic long_500k
+        assert len(cells) == 33
+        long_archs = {a for a, s in cells if s == "long_500k"}
+        assert long_archs == {"mamba2-130m", "hymba-1.5b", "gemma3-4b"}
+        skipped = [(a, "long_500k") for a in ARCHS
+                   if a not in long_archs]
+        assert len(cells) + len(skipped) == 40
+
+    def test_smoke_configs_small(self):
+        for name, cfg in ARCHS.items():
+            sc = smoke_config(cfg)
+            assert sc.param_count() < 5e6, (name, sc.param_count())
+            assert sc.family == cfg.family
+
+
+def test_offload_end_to_end_consistency(sim):
+    """Planner's per-site times equal direct simulator queries."""
+    from repro.serving.offload import OffloadPlanner
+    planner = OffloadPlanner(ARCHS["granite-8b"], sim)
+    plan = planner.plan(fence=True)
+    site = next(d for d in plan if d.site.name == "mlp.wo")
+    direct = sim.gemv(site.site.h, site.site.w, PimDType.W8A8,
+                      fence=True, reshape=site.reshape)
+    assert site.pim_ns == direct.ns
