@@ -5,12 +5,13 @@ this benchmark quantifies the speedup in resolved commands/second.
 """
 from __future__ import annotations
 
+import dataclasses
 import time
 
 import numpy as np
 
 from repro.core import commands as C
-from repro.core.engine import make_engine, run_streams
+from repro.core.engine import resolve_fleet, run_streams
 from repro.core.engine_ref import RefEngine
 from repro.core.timing import DEFAULT_SYSTEM
 from repro.pimkernel.executor import PimExecutor
@@ -41,10 +42,25 @@ def main() -> dict:
     jax_s = (time.perf_counter() - t0) / reps
     jax_rate = n / jax_s
 
+    # Wide-fleet throughput: 64 distinct lanes (one spec variant per
+    # lane, so resolve_fleet's lane dedup cannot collapse them) — the
+    # regime design-space sweeps run in.
+    lanes = 64
+    variants = [dataclasses.replace(cyc, cRCD=cyc.cRCD + i)
+                for i in range(lanes)]
+    points = [(v, [stream]) for v in variants]
+    resolve_fleet(points)
+    t0 = time.perf_counter()
+    resolve_fleet(points)
+    fleet_s = time.perf_counter() - t0
+    fleet_rate = lanes * n / fleet_s
+
     print(f"engine/ref,{ref_s*1e6/prefix.shape[0]*1e0:.3f},{ref_rate:.0f}")
     print(f"engine/jax,{jax_s*1e6/n:.3f},{jax_rate:.0f}")
+    print(f"engine/fleet64,{fleet_s*1e6/(lanes*n):.3f},{fleet_rate:.0f}")
     print(f"engine/speedup,{jax_s*1e6:.1f},{jax_rate/ref_rate:.1f}")
     return dict(ref_cmds_per_s=ref_rate, jax_cmds_per_s=jax_rate,
+                fleet_cmds_per_s=fleet_rate,
                 speedup=jax_rate / ref_rate, stream_len=n)
 
 

@@ -1,0 +1,114 @@
+"""Fleet-throughput benchmark: batched vs looped sweep resolution.
+
+Two comparisons over the full Fig. 4 grid (both axes, all dtypes, fence
+on/off, PIM + baseline points):
+
+* ``fleet/resolve_*`` — the execution core alone: per-point
+  ``engine.run_streams`` loop vs one ``engine.resolve_fleet`` call on the
+  same prebuilt streams (isolates the dispatch/batching win).
+* ``fleet/sweep_*`` — end to end: a per-call ``run_gemv``/``run_baseline``
+  loop vs one ``PimExecutor.run_many`` (includes stream building, which
+  both paths share).
+
+Also asserts the batched cycle counts are bit-identical to the looped
+ones, so the speedup rows in BENCH_*.json always track a correct result.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import engine
+from repro.core.timing import DEFAULT_SYSTEM
+from repro.pimkernel.executor import GemvRequest, PimExecutor
+from repro.pimkernel.tileconfig import ALL_DTYPES
+
+DIMS = [512, 1024, 2048, 4096, 8192]
+BASE = 4096
+
+
+def fig4_grid() -> list[GemvRequest]:
+    """Every (axis, dtype, dim, fence) point of Fig. 4 + its baseline."""
+    reqs: list[GemvRequest] = []
+    seen: set = set()
+    for fence in (False, True):
+        for axis in ("activation", "output"):
+            for dt in ALL_DTYPES:
+                for d in DIMS:
+                    H, W = (BASE, d) if axis == "activation" else (d, BASE)
+                    for r in (GemvRequest.pim(H, W, dt, fence=fence),
+                              GemvRequest.baseline(H, W, dt)):
+                        if r.key not in seen:
+                            seen.add(r.key)
+                            reqs.append(r)
+    return reqs
+
+
+def main() -> dict:
+    ex = PimExecutor(DEFAULT_SYSTEM)
+    reqs = fig4_grid()
+    n = len(reqs)
+
+    # Build all streams once; both resolve paths time the same arrays.
+    planned = ex.plan_many(reqs)
+    points = [(ex.cyc, p.streams) for p in planned]
+
+    # Warm the compile caches of both paths (compilation is a one-time
+    # cost shared across every spec variant; we measure steady state).
+    engine.run_streams(ex.cyc, planned[0].streams)
+    engine.resolve_fleet(points)
+
+    t0 = time.perf_counter()
+    looped = [engine.run_streams(ex.cyc, p.streams)[1] for p in planned]
+    resolve_loop_s = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    fleet = engine.resolve_fleet(points)
+    resolve_batch_s = time.perf_counter() - t0
+
+    for solo, fr in zip(looped, fleet):
+        np.testing.assert_array_equal(solo, fr.totals)
+
+    print(f"fleet/resolve_looped,{resolve_loop_s*1e6/n:.1f},"
+          f"{n/resolve_loop_s:.1f}")
+    print(f"fleet/resolve_batched,{resolve_batch_s*1e6/n:.1f},"
+          f"{n/resolve_batch_s:.1f}")
+    print(f"fleet/resolve_speedup,{resolve_batch_s*1e3:.1f},"
+          f"{resolve_loop_s/resolve_batch_s:.1f}")
+
+    # End to end: fresh executors so neither path reuses built streams.
+    ex_loop = PimExecutor(DEFAULT_SYSTEM)
+    t0 = time.perf_counter()
+    solo_res = [
+        ex_loop.run_gemv(r.H, r.W, r.dtype, fence=r.fence,
+                         reshape=r.reshape, flush=r.flush)
+        if r.kind == "pim" else
+        ex_loop.run_baseline(r.H, r.W, r.dtype)
+        for r in reqs]
+    sweep_loop_s = time.perf_counter() - t0
+
+    ex_batch = PimExecutor(DEFAULT_SYSTEM)
+    t0 = time.perf_counter()
+    batch_res = ex_batch.run_many(reqs)
+    sweep_batch_s = time.perf_counter() - t0
+
+    for a, b in zip(solo_res, batch_res):
+        assert a.cycles == b.cycles, (a.meta, a.cycles, b.cycles)
+
+    print(f"fleet/sweep_looped,{sweep_loop_s*1e6/n:.1f},"
+          f"{n/sweep_loop_s:.1f}")
+    print(f"fleet/sweep_batched,{sweep_batch_s*1e6/n:.1f},"
+          f"{n/sweep_batch_s:.1f}")
+    print(f"fleet/sweep_speedup,{sweep_batch_s*1e3:.1f},"
+          f"{sweep_loop_s/sweep_batch_s:.1f}")
+
+    return dict(points=n,
+                resolve_speedup=resolve_loop_s / resolve_batch_s,
+                sweep_speedup=sweep_loop_s / sweep_batch_s,
+                sweep_batched_s=sweep_batch_s,
+                sweep_looped_s=sweep_loop_s)
+
+
+if __name__ == "__main__":
+    main()

@@ -6,6 +6,7 @@ Prints ``name,us_per_call,derived`` CSV rows:
   reshape/*    — reshape-optimization gain          (paper §3.3)
   target/*     — deviation vs published 4096 numbers
   engine/*     — cycle-engine throughput (JAX vs oracle)
+  fleet/*      — batched vs looped sweep resolution (fleet API)
   offload/*    — LLM decode offload case study (framework layer)
   roofline/*   — dominant term + roofline fraction per dry-run cell
 """
@@ -13,10 +14,12 @@ from __future__ import annotations
 
 
 def main() -> None:
-    from . import energy_fig, engine_speed, paper_figs, roofline
+    from . import energy_fig, engine_speed, fleet_speed, paper_figs, \
+        roofline
 
     paper_figs.main()
     engine_speed.main()
+    fleet_speed.main()
     energy_fig.main()
 
     # LLM decode offload case study (the paper's motivating workload)

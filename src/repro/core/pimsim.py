@@ -4,15 +4,22 @@
 engine, memory controller, device model) and the SW model (PIM Kernel:
 Data Mapper + Executor).  Benchmarks, the serving offload planner and the
 examples all talk to this class.
+
+Every query path — ``gemv``, ``baseline``, ``speedup``, ``sweep`` — routes
+through :meth:`run_many`, which dedupes requests against the result cache
+and resolves all cache misses in one batched engine call (the fleet API).
+A full Fig. 4 grid is therefore a single ``resolve_fleet`` dispatch
+instead of hundreds of per-point engine calls.
 """
 from __future__ import annotations
 
 import functools
+from typing import Sequence
 
 import numpy as np
 
 from repro.core.timing import DEFAULT_SYSTEM, SystemSpec
-from repro.pimkernel.executor import PimExecutor, PimResult
+from repro.pimkernel.executor import GemvRequest, PimExecutor, PimResult
 from repro.pimkernel.tileconfig import ALL_DTYPES, PimDType
 
 
@@ -23,28 +30,37 @@ class PimSimulator:
         self._cache: dict = {}
 
     # ------------------------------------------------------------------
+    def run_many(self, reqs: Sequence[GemvRequest]) -> list[PimResult]:
+        """Resolve many requests; cache-hit dedupe + one engine batch."""
+        reqs = list(reqs)
+        missing, seen = [], set()
+        for r in reqs:
+            if r.key not in self._cache and r.key not in seen:
+                missing.append(r)
+                seen.add(r.key)
+        if missing:
+            for r, res in zip(missing, self.executor.run_many(missing)):
+                self._cache[r.key] = res
+        return [self._cache[r.key] for r in reqs]
+
     def gemv(self, H: int, W: int, dtype: PimDType | str,
              fence: bool = False, reshape: bool = False,
              flush: str = "bus") -> PimResult:
-        dtype = PimDType.parse(dtype) if isinstance(dtype, str) else dtype
-        key = ("pim", H, W, dtype, fence, reshape, flush)
-        if key not in self._cache:
-            self._cache[key] = self.executor.run_gemv(
-                H, W, dtype, fence=fence, reshape=reshape, flush=flush)
-        return self._cache[key]
+        return self.run_many([GemvRequest.pim(H, W, dtype, fence=fence,
+                                              reshape=reshape,
+                                              flush=flush)])[0]
 
     def baseline(self, H: int, W: int, dtype: PimDType | str) -> PimResult:
-        dtype = PimDType.parse(dtype) if isinstance(dtype, str) else dtype
-        key = ("base", H, W, dtype)
-        if key not in self._cache:
-            self._cache[key] = self.executor.run_baseline(H, W, dtype)
-        return self._cache[key]
+        return self.run_many([GemvRequest.baseline(H, W, dtype)])[0]
 
     def speedup(self, H: int, W: int, dtype: PimDType | str,
                 fence: bool = False, reshape: bool = False) -> float:
         """PIM speedup vs sequential-weight-read baseline (Fig. 4)."""
-        return (self.baseline(H, W, dtype).ns
-                / self.gemv(H, W, dtype, fence=fence, reshape=reshape).ns)
+        base, pim = self.run_many([
+            GemvRequest.baseline(H, W, dtype),
+            GemvRequest.pim(H, W, dtype, fence=fence, reshape=reshape),
+        ])
+        return base.ns / pim.ns
 
     def gemv_functional(self, weights: np.ndarray, x: np.ndarray,
                         dtype: PimDType | str, **kw):
@@ -58,16 +74,28 @@ class PimSimulator:
         """Paper Fig. 4 sweeps: vary one dimension, fix the other at 4096.
 
         axis='activation' varies W (input dim, top panels); axis='output'
-        varies H (bottom panels).
+        varies H (bottom panels).  The whole grid — every (dtype, dim)
+        point plus its baseline — is resolved as one fleet batch.
         """
-        dtypes = dtypes or ALL_DTYPES
+        dtypes = [PimDType.parse(d) if isinstance(d, str) else d
+                  for d in (dtypes or ALL_DTYPES)]
+        reqs: list[GemvRequest] = []
+        for dt in dtypes:
+            for d in dims:
+                H, W = (base_dim, d) if axis == "activation" else (d,
+                                                                   base_dim)
+                reqs.append(GemvRequest.baseline(H, W, dt))
+                reqs.append(GemvRequest.pim(H, W, dt, fence=fence,
+                                            reshape=reshape))
+        res = self.run_many(reqs)
         out: dict = {}
+        it = iter(res)
         for dt in dtypes:
             row = []
-            for d in dims:
-                H, W = (base_dim, d) if axis == "activation" else (d, base_dim)
-                row.append(self.speedup(H, W, dt, fence=fence,
-                                        reshape=reshape))
+            for _d in dims:
+                base = next(it)
+                pim = next(it)
+                row.append(base.ns / pim.ns)
             out[dt.name] = row
         return out
 

@@ -135,7 +135,16 @@ class SystemSpec:
 
 @dataclasses.dataclass(frozen=True)
 class TimingCycles:
-    """All constraints in integer CK cycles — shared by both engines."""
+    """All constraints in integer CK cycles — shared by both engines.
+
+    Registered as a JAX pytree so the cycle engine can take the timing
+    configuration as a *traced* argument: every cycle field (and the
+    engine-unused ``tck_ns``) is a data leaf, while ``num_banks`` — which
+    fixes the channel-state array shapes — stays static metadata.  Stacking
+    many instances leaf-wise yields the per-point timing data of a
+    simulation fleet (`engine.stack_cycles`), which is how one compiled
+    resolver serves every ``SystemSpec`` variant.
+    """
 
     tck_ns: float
     num_banks: int
@@ -151,6 +160,19 @@ class TimingCycles:
 
     def as_tuple(self) -> tuple:
         return dataclasses.astuple(self)
+
+
+try:  # register lazily so numpy-only users never pay the jax import
+    import jax.tree_util as _jtu
+
+    _jtu.register_dataclass(
+        TimingCycles,
+        data_fields=[f.name for f in dataclasses.fields(TimingCycles)
+                     if f.name != "num_banks"],
+        meta_fields=["num_banks"],
+    )
+except ImportError:  # pragma: no cover - jax is a hard dep elsewhere
+    pass
 
 
 # A default spec used across tests/benchmarks.

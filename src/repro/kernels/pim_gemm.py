@@ -16,7 +16,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from .pim_gemv import _pad_to
+from .pim_gemv import _CompilerParams, _pad_to
 
 
 def _gemm_int_kernel(x_ref, w_ref, s_ref, o_ref, acc_ref, *, w_bits: int,
@@ -89,7 +89,7 @@ def pim_gemm_int(wq, xb_q, w_scale, x_scale, *, w_bits: int = 8,
         out_specs=pl.BlockSpec((bb, bh), lambda i, j, k: (i, j)),
         out_shape=jax.ShapeDtypeStruct((bp, hp), jnp.float32),
         scratch_shapes=[pltpu.VMEM((bb, bh), jnp.int32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(xb_q, wq, ws)
@@ -119,7 +119,7 @@ def pim_gemm_fp(w_fp8, xb, *, block: tuple[int, int, int] = (8, 256, 512),
         out_specs=pl.BlockSpec((bb, bh), lambda i, j, k: (i, j)),
         out_shape=jax.ShapeDtypeStruct((bp, hp), jnp.float32),
         scratch_shapes=[pltpu.VMEM((bb, bh), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(xb, w_fp8)

@@ -25,6 +25,14 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# jax renamed TPUCompilerParams -> CompilerParams around 0.5; accept both.
+_CompilerParams = getattr(pltpu, "CompilerParams",
+                          getattr(pltpu, "TPUCompilerParams", None))
+if _CompilerParams is None:  # fail at import, not inside pallas_call
+    raise ImportError(
+        "jax.experimental.pallas.tpu exposes neither CompilerParams nor "
+        "TPUCompilerParams; this jax version is unsupported")
+
 
 def _gemv_int_kernel(w_ref, x_ref, s_ref, o_ref, acc_ref, *, w_bits: int,
                      n_w: int):
@@ -111,7 +119,7 @@ def pim_gemv_int(wq, x_q, w_scale, x_scale, *, w_bits: int = 8,
         out_specs=pl.BlockSpec((bh, 1), lambda i, k: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((hp, 1), jnp.float32),
         scratch_shapes=[pltpu.VMEM((bh, 1), jnp.int32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(wq, x_q, ws)
@@ -139,7 +147,7 @@ def pim_gemv_fp(w_fp8, x, *, block: tuple[int, int] = (256, 512),
         out_specs=pl.BlockSpec((bh, 1), lambda i, k: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((hp, 1), jnp.float32),
         scratch_shapes=[pltpu.VMEM((bh, 1), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(w_fp8, x)

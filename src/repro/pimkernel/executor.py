@@ -3,10 +3,18 @@
 Glues Code Gen + PIM Control + GEMV Kernel over a Data-Mapper layout and
 runs the result through the cycle engine (timing view) and optionally the
 functional device model (behavioral view).
+
+The executor speaks the *fleet request* API: a :class:`GemvRequest` names
+one unit of simulator work (a PIM GEMV or the non-PIM baseline), and
+:meth:`PimExecutor.run_many` plans every request eagerly, dedupes repeats,
+pads all per-channel command streams into one flat fleet batch and
+resolves them with a single ``engine.resolve_fleet`` call.  ``run_gemv`` /
+``run_baseline`` are the one-request conveniences on top.
 """
 from __future__ import annotations
 
 import dataclasses
+from typing import Iterable, Sequence
 
 import numpy as np
 
@@ -18,6 +26,51 @@ from . import codegen
 from .datamapper import DataMapper, PimLayout
 from .gemv import GemvKernel, GemvStreams
 from .tileconfig import PimDType, TileConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class GemvRequest:
+    """One unit of fleet work: a PIM GEMV point or its host baseline.
+
+    ``key`` is the canonical dedupe/cache key — baseline timing depends
+    only on (H, W, dtype), so the PIM-only knobs are excluded there.
+    """
+
+    H: int
+    W: int
+    dtype: PimDType
+    fence: bool = False
+    reshape: bool = False
+    flush: str = "bus"
+    kind: str = "pim"            # "pim" | "baseline"
+
+    @staticmethod
+    def pim(H: int, W: int, dtype: PimDType | str, *, fence: bool = False,
+            reshape: bool = False, flush: str = "bus") -> "GemvRequest":
+        dtype = PimDType.parse(dtype) if isinstance(dtype, str) else dtype
+        return GemvRequest(H, W, dtype, fence, reshape, flush, "pim")
+
+    @staticmethod
+    def baseline(H: int, W: int, dtype: PimDType | str) -> "GemvRequest":
+        dtype = PimDType.parse(dtype) if isinstance(dtype, str) else dtype
+        return GemvRequest(H, W, dtype, kind="baseline")
+
+    @property
+    def key(self) -> tuple:
+        if self.kind == "baseline":
+            return ("base", self.H, self.W, self.dtype)
+        return ("pim", self.H, self.W, self.dtype, self.fence,
+                self.reshape, self.flush)
+
+
+@dataclasses.dataclass
+class PlannedGemv:
+    """A request with its layouts/programs/streams built, ready to time."""
+
+    req: GemvRequest
+    streams: list[np.ndarray]
+    gs: GemvStreams | None = None      # pim requests only
+    weight_bytes: int = 0              # baseline requests only
 
 
 @dataclasses.dataclass
@@ -63,25 +116,8 @@ class PimExecutor:
                                  flush=flush)
 
     def time_streams(self, gs: GemvStreams) -> PimResult:
-        issue, totals = engine.run_streams(self.cyc, gs.streams)
-        cycles = int(totals.max()) if totals.size else 0
-        counts = sum((C.op_counts(s) for s in gs.streams),
-                     np.zeros(C.NUM_OPCODES, dtype=np.int64))
-        active = max(1, int(round(16 * gs.layout.utilization)))
-        energy = gemv_energy_summary(gs.streams, totals, self.spec,
-                                     gs.meta["flops"], self.energy_params,
-                                     active_banks=active)
-        return PimResult(
-            cycles=cycles,
-            ns=cycles * self.cyc.tck_ns,
-            flops=gs.meta["flops"],
-            weight_bytes=gs.meta["weight_bytes"],
-            utilization=gs.meta["utilization"],
-            split=gs.meta["split"],
-            energy=energy,
-            counts=counts,
-            meta=gs.meta,
-        )
+        _, totals = engine.run_streams(self.cyc, gs.streams)
+        return self._pim_result(gs, totals)
 
     def run_gemv(self, H: int, W: int, dtype: PimDType,
                  fence: bool = False, reshape: bool = False,
@@ -104,21 +140,86 @@ class PimExecutor:
                                 gs.payloads)
         return y, self.time_streams(gs)
 
-    # -- non-PIM baseline (Fig. 4 normalization) --------------------------
-    def run_baseline(self, H: int, W: int, dtype: PimDType) -> PimResult:
-        """Sequential weight read on a non-PIM system (4 channels)."""
-        total_bytes = H * W * dtype.w_bits // 8
-        per_ch = -(-total_bytes // self.spec.num_channels)
-        stream = controller.sequential_read_stream(per_ch, self.spec)
-        streams = [stream] * self.spec.num_channels
-        issue, totals = engine.run_streams(self.cyc, [stream])
-        cycles = int(totals.max())
-        counts = C.op_counts(stream) * self.spec.num_channels
-        energy = gemv_energy_summary(streams, [cycles] * len(streams),
-                                     self.spec, 2 * H * W,
-                                     self.energy_params)
+    # -- fleet API -------------------------------------------------------
+    def plan_many(self, reqs: Iterable[GemvRequest]) -> list[PlannedGemv]:
+        """Build every layout/program/stream eagerly (no timing yet)."""
+        out = []
+        for r in reqs:
+            if r.kind == "baseline":
+                total_bytes = r.H * r.W * r.dtype.w_bits // 8
+                per_ch = -(-total_bytes // self.spec.num_channels)
+                stream = controller.sequential_read_stream(per_ch, self.spec)
+                out.append(PlannedGemv(
+                    req=r, streams=[stream] * self.spec.num_channels,
+                    weight_bytes=total_bytes))
+            else:
+                layout, program = self.plan(r.H, r.W, r.dtype,
+                                            reshape=r.reshape)
+                gs = self.build_streams(layout, program, fence=r.fence,
+                                        flush=r.flush)
+                out.append(PlannedGemv(req=r, streams=gs.streams, gs=gs))
+        return out
+
+    def run_many(self, reqs: Sequence[GemvRequest]) -> list[PimResult]:
+        """Resolve many requests through ONE batched engine call.
+
+        Duplicate requests (by ``key``) are planned and timed once; the
+        returned list matches the input order.  Results are bit-identical
+        to the per-call ``run_gemv`` / ``run_baseline`` paths.
+        """
+        reqs = list(reqs)
+        uniq: dict[tuple, GemvRequest] = {}
+        for r in reqs:
+            uniq.setdefault(r.key, r)
+        planned = self.plan_many(uniq.values())
+        fleet = engine.resolve_fleet(
+            [(self.cyc, p.streams) for p in planned])
+        by_key = {p.req.key: self._finish(p, fr.totals)
+                  for p, fr in zip(planned, fleet)}
+        return [by_key[r.key] for r in reqs]
+
+    def _finish(self, p: PlannedGemv, totals: np.ndarray) -> PimResult:
+        if p.req.kind == "baseline":
+            return self._baseline_result(p.req, p.streams, totals,
+                                         p.weight_bytes)
+        return self._pim_result(p.gs, totals)
+
+    # -- result assembly -------------------------------------------------
+    def _pim_result(self, gs: GemvStreams,
+                    totals: np.ndarray) -> PimResult:
+        cycles = int(totals.max()) if totals.size else 0
+        counts = sum((C.op_counts(s) for s in gs.streams),
+                     np.zeros(C.NUM_OPCODES, dtype=np.int64))
+        active = max(1, int(round(16 * gs.layout.utilization)))
+        energy = gemv_energy_summary(gs.streams, totals, self.spec,
+                                     gs.meta["flops"], self.energy_params,
+                                     active_banks=active)
+        return PimResult(
+            cycles=cycles,
+            ns=cycles * self.cyc.tck_ns,
+            flops=gs.meta["flops"],
+            weight_bytes=gs.meta["weight_bytes"],
+            utilization=gs.meta["utilization"],
+            split=gs.meta["split"],
+            energy=energy,
+            counts=counts,
+            meta=gs.meta,
+        )
+
+    def _baseline_result(self, req: GemvRequest, streams: list[np.ndarray],
+                         totals: np.ndarray, total_bytes: int) -> PimResult:
+        cycles = int(totals.max()) if totals.size else 0
+        counts = sum((C.op_counts(s) for s in streams),
+                     np.zeros(C.NUM_OPCODES, dtype=np.int64))
+        energy = gemv_energy_summary(streams, totals, self.spec,
+                                     2 * req.H * req.W, self.energy_params)
         return PimResult(cycles=cycles, ns=cycles * self.cyc.tck_ns,
-                         flops=2 * H * W,
+                         flops=2 * req.H * req.W,
                          weight_bytes=total_bytes,
                          utilization=1.0, split=1, energy=energy,
                          counts=counts, meta=dict(kind="baseline"))
+
+    # -- non-PIM baseline (Fig. 4 normalization) --------------------------
+    def run_baseline(self, H: int, W: int, dtype: PimDType) -> PimResult:
+        """Sequential weight read on a non-PIM system (all channels)."""
+        return self.run_many([GemvRequest.baseline(H, W, dtype)])[0]

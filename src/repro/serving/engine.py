@@ -48,6 +48,7 @@ class ServingEngine:
         self.waiting: list[Request] = []
         self.planner = planner
         self.stats = dict(steps=0, tokens=0, prefills=0)
+        self.batch_occupancy: dict[int, int] = {}
 
         self._decode = jax.jit(
             lambda p, c, t, pos: M.decode_step(cfg, p, c, t, pos))
@@ -87,6 +88,8 @@ class ServingEngine:
         act = [i for i, r in enumerate(self.active) if r is not None]
         if not act:
             return False
+        self.batch_occupancy[len(act)] = \
+            self.batch_occupancy.get(len(act), 0) + 1
         tokens = np.zeros((self.slots, 1), dtype=np.int32)
         for i in act:
             tokens[i, 0] = self.active[i].out[-1]
@@ -112,7 +115,14 @@ class ServingEngine:
             self.step()
             max_steps -= 1
         out = dict(self.stats)
+        out["batch_occupancy"] = dict(self.batch_occupancy)
         if self.planner is not None:
-            out["pim_telemetry"] = self.planner.decode_speedup(
-                batch=max(1, self.slots))
+            # One batched fleet query builds the site plan; per-batch-size
+            # speedups are then pure arithmetic over the cached decisions.
+            tel = self.planner.decode_speedup(batch=max(1, self.slots))
+            batches = sorted(self.batch_occupancy) or [max(1, self.slots)]
+            tel["per_batch_speedup"] = {
+                b: self.planner.decode_speedup(batch=b)["speedup"]
+                for b in batches}
+            out["pim_telemetry"] = tel
         return out

@@ -20,6 +20,7 @@ import dataclasses
 
 from repro.configs.base import ArchConfig
 from repro.core.pimsim import PimSimulator
+from repro.pimkernel.executor import GemvRequest
 from repro.pimkernel.tileconfig import PimDType
 
 
@@ -84,18 +85,33 @@ class OffloadPlanner:
         self.cfg = cfg
         self.sim = sim or PimSimulator()
         self.dtype = dtype
+        self._plans: dict[bool, list[OffloadDecision]] = {}
 
     def plan(self, fence: bool = True) -> list[OffloadDecision]:
+        """Offload decision per GEMV site.
+
+        All per-site PIM and host-baseline telemetry queries are batched
+        into one fleet request — a single engine dispatch covers the whole
+        model — and the resulting plan is cached per fence setting.
+        """
+        if fence in self._plans:
+            return self._plans[fence]
+        sites = decode_gemv_sites(self.cfg)
+        reshapes = [site.h < 2048 for site in sites]   # §3.3 regime
+        reqs = []
+        for site, reshape in zip(sites, reshapes):
+            reqs.append(GemvRequest.pim(site.h, site.w, self.dtype,
+                                        fence=fence, reshape=reshape))
+            reqs.append(GemvRequest.baseline(site.h, site.w, self.dtype))
+        res = self.sim.run_many(reqs)
         out = []
-        for site in decode_gemv_sites(self.cfg):
-            reshape = site.h < 2048          # the paper's §3.3 regime
-            pim = self.sim.gemv(site.h, site.w, self.dtype, fence=fence,
-                                reshape=reshape)
-            base = self.sim.baseline(site.h, site.w, self.dtype)
+        for site, reshape, (pim, base) in zip(sites, reshapes,
+                                              zip(res[::2], res[1::2])):
             crossover = max(1, int(base.ns / pim.ns))
             out.append(OffloadDecision(site=site, pim_ns=pim.ns,
                                        host_ns=base.ns, reshape=reshape,
                                        offload_below_batch=crossover))
+        self._plans[fence] = out
         return out
 
     def decode_speedup(self, batch: int = 1, fence: bool = True) -> dict:

@@ -1,0 +1,161 @@
+"""Fleet execution core: batched parity, dedupe, and compile behavior.
+
+The contract of the fleet request API: ``run_many`` is bit-identical to
+the per-call paths, the result cache dedupes across query styles, points
+with *different* ``SystemSpec`` timing resolve correctly inside one fleet
+batch, and — because the timing configuration is traced, not baked in —
+running the same workload under many spec variants costs exactly one
+engine compilation per stream-length bucket.
+"""
+import numpy as np
+
+from repro.core import engine
+from repro.core.pimsim import PimSimulator
+from repro.core.timing import (DEFAULT_SYSTEM, LpddrTimings, PimSpec,
+                               SystemSpec)
+from repro.pimkernel.executor import GemvRequest, PimExecutor
+from repro.pimkernel.tileconfig import PimDType
+
+from test_engine import build_valid_stream, random_op_tuples
+
+# A (H, W, dtype, fence, reshape) grid covering both tile groups, the
+# reshape regime and the fence path.
+GRID = [
+    (256, 1024, PimDType.W8A8, False, False),
+    (256, 1024, PimDType.W8A8, False, True),
+    (512, 4096, PimDType.W8A16, True, False),
+    (1024, 512, PimDType.W4A4, False, False),
+    (1024, 2048, PimDType.W4A16, True, True),
+    (2048, 2048, PimDType.FP_W8A8, True, False),
+    (4096, 1024, PimDType.FP_W8A16, False, False),
+    (4096, 4096, PimDType.W4A8, False, False),
+]
+
+
+def _same_result(a, b):
+    assert a.cycles == b.cycles
+    assert a.ns == b.ns
+    assert a.flops == b.flops
+    assert a.weight_bytes == b.weight_bytes
+    np.testing.assert_array_equal(a.counts, b.counts)
+    assert a.energy == b.energy
+
+
+def test_run_many_bit_identical_to_run_gemv():
+    ex = PimExecutor(DEFAULT_SYSTEM)
+    reqs = [GemvRequest.pim(h, w, dt, fence=f, reshape=r)
+            for (h, w, dt, f, r) in GRID]
+    batched = ex.run_many(reqs)
+    for req, res in zip(reqs, batched):
+        solo = ex.run_gemv(req.H, req.W, req.dtype, fence=req.fence,
+                           reshape=req.reshape)
+        _same_result(res, solo)
+
+
+def test_run_many_baseline_bit_identical():
+    ex = PimExecutor(DEFAULT_SYSTEM)
+    reqs = [GemvRequest.baseline(h, w, dt) for (h, w, dt, _f, _r) in GRID]
+    batched = ex.run_many(reqs)
+    for req, res in zip(reqs, batched):
+        _same_result(res, ex.run_baseline(req.H, req.W, req.dtype))
+
+
+def test_run_baseline_times_every_channel():
+    """All num_channels streams flow through the engine (not 1 scaled)."""
+    ex = PimExecutor(DEFAULT_SYSTEM)
+    res = ex.run_baseline(1024, 1024, PimDType.W8A8)
+    per_ch = res.energy["channels"]
+    assert len(per_ch) == DEFAULT_SYSTEM.num_channels
+    # identical replicated streams -> identical per-channel energy
+    assert all(d == per_ch[0] for d in per_ch[1:])
+    total = 1024 * 1024 * PimDType.W8A8.w_bits // 8
+    assert res.weight_bytes == total
+
+
+def test_run_many_dedupes_and_preserves_order():
+    ex = PimExecutor(DEFAULT_SYSTEM)
+    r1 = GemvRequest.pim(256, 1024, PimDType.W8A8)
+    r2 = GemvRequest.baseline(256, 1024, PimDType.W8A8)
+    res = ex.run_many([r1, r2, r1, r1, r2])
+    assert res[0] is res[2] and res[0] is res[3]
+    assert res[1] is res[4]
+    assert res[0].meta.get("kind") != "baseline"
+    assert res[1].meta.get("kind") == "baseline"
+
+
+def test_simulator_cache_shared_across_query_styles():
+    sim = PimSimulator()
+    sw = sim.sweep([1024, 2048], [PimDType.W8A8])["W8A8"]
+    # speedup() must come straight from the cache (same keys)
+    assert sim.speedup(4096, 1024, PimDType.W8A8) == sw[0]
+    assert sim.speedup(4096, 2048, PimDType.W8A8) == sw[1]
+    direct = (sim.baseline(4096, 1024, PimDType.W8A8).ns
+              / sim.gemv(4096, 1024, PimDType.W8A8).ns)
+    assert direct == sw[0]
+
+
+def test_multi_spec_fleet_resolves_each_spec():
+    """Points with different TimingCycles share one fleet batch."""
+    rng = np.random.default_rng(7)
+    stream = build_valid_stream(random_op_tuples(rng))
+    specs = [SystemSpec(timings=LpddrTimings(tRCD=18.0 + 2 * i))
+             for i in range(4)]
+    points = [(sp.derive_cycles(), [stream, stream]) for sp in specs]
+    fleet = engine.resolve_fleet(points)
+    totals = set()
+    for sp, fr in zip(specs, fleet):
+        _, solo = engine.run_streams(sp.derive_cycles(), [stream, stream])
+        np.testing.assert_array_equal(solo, fr.totals)
+        totals.add(int(fr.totals[0]))
+    assert len(totals) > 1, "spec variants must resolve differently"
+
+
+def test_one_compilation_across_spec_variants():
+    """>= 8 SystemSpec variants, same workload: zero extra compiles.
+
+    The timing configuration is traced fleet data, so the jit cache keys
+    only on (num_banks, fleet bucket, length bucket) — the first variant
+    pays one compilation per stream-length bucket, the rest pay none.
+    """
+    variants = [
+        SystemSpec(timings=LpddrTimings(tRCD=16.0 + i, tRP=17.0 + i),
+                   pim=PimSpec(mac_interval_ck=2 + (i % 3)),
+                   fence_ns=100.0 + 10 * i)
+        for i in range(8)
+    ]
+    cycs = [sp.derive_cycles() for sp in variants]
+    assert len(set(cycs)) == 8, "variants must be distinct configs"
+
+    rng = np.random.default_rng(3)
+    streams = [build_valid_stream(random_op_tuples(rng))
+               for _ in range(4)]
+
+    engine.resolve_fleet([(cycs[0], streams)])   # compile the buckets
+    warm = engine.compile_cache_size()
+    totals = []
+    for cyc in cycs:
+        fr = engine.resolve_fleet([(cyc, streams)])[0]
+        totals.append(int(fr.totals.max()))
+    assert engine.compile_cache_size() == warm, \
+        "spec variants must not trigger recompilation"
+    assert len(set(totals)) > 1
+
+
+def test_compilations_bounded_by_length_buckets():
+    """Distinct stream-length buckets compile once each; repeats reuse."""
+    cyc = DEFAULT_SYSTEM.derive_cycles()
+    rng = np.random.default_rng(5)
+    streams = {}
+    for target in (20, 200):
+        while True:
+            s = build_valid_stream(random_op_tuples(rng))
+            if s.shape[0] and engine._length_bucket(s.shape[0]) not in \
+                    streams and s.shape[0] >= target:
+                streams[engine._length_bucket(s.shape[0])] = s
+                break
+    for s in streams.values():          # compile each bucket once
+        engine.resolve_fleet([(cyc, [s])])
+    warm = engine.compile_cache_size()
+    for s in streams.values():          # same buckets again -> no compile
+        engine.resolve_fleet([(cyc, [s])])
+    assert engine.compile_cache_size() == warm

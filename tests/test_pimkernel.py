@@ -3,7 +3,12 @@ Mapper pack/unpack round trip, codegen, end-to-end behavioral fidelity
 (command streams interpreted by the device model == numpy GEMV)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:        # collection must never hard-fail
+    HAVE_HYPOTHESIS = False
 
 from repro.core.pimsim import PimSimulator
 from repro.core.timing import DEFAULT_SYSTEM, PimSpec, SystemSpec
@@ -32,10 +37,7 @@ def test_vertical_mapping_channel_first():
     assert chans[:4] == [0, 1, 2, 3]
 
 
-@settings(max_examples=50, deadline=None)
-@given(h_tile=st.integers(0, 300), w_tile=st.integers(0, 60),
-       n_wtiles=st.integers(1, 61), split=st.integers(1, 4))
-def test_tile_addresses_disjoint(h_tile, w_tile, n_wtiles, split):
+def _check_tile_addresses_disjoint(h_tile, w_tile, n_wtiles, split):
     """Two distinct tiles never share (block, offset)."""
     if w_tile >= n_wtiles:
         w_tile = w_tile % n_wtiles
@@ -78,10 +80,7 @@ def test_pack_unpack_roundtrip(dtype, reshape):
     assert (back[H:, :] == 0).all() and (back[:, W:] == 0).all()
 
 
-@settings(max_examples=20, deadline=None)
-@given(h=st.integers(1, 400), w=st.integers(1, 3000),
-       di=st.integers(0, len(ALL_DTYPES) - 1), reshape=st.booleans())
-def test_layout_covers_all_tiles(h, w, di, reshape):
+def _check_layout_covers_all_tiles(h, w, di, reshape):
     """Every tile is placed exactly once; utilization in (0, 1]."""
     dm = DataMapper(SPEC)
     layout = dm.layout(h, w, ALL_DTYPES[di], reshape=reshape)
@@ -176,13 +175,52 @@ def test_cosim_reshape_fence_variants(reshape, fence):
         assert res.split > 1
 
 
-@settings(max_examples=10, deadline=None)
-@given(h=st.integers(1, 200), w=st.integers(1, 1200),
-       reshape=st.booleans())
-def test_cosim_random_geometry(h, w, reshape):
+def _check_cosim_random_geometry(h, w, reshape):
     rng = np.random.default_rng(h * 10007 + w)
     sim = PimSimulator()
     wmat = rng.integers(-128, 128, size=(h, w)).astype(np.int32)
     x = rng.integers(-128, 128, size=(w,)).astype(np.int32)
     y, _ = sim.gemv_functional(wmat, x, PimDType.W8A8, reshape=reshape)
     assert np.array_equal(y, wmat.astype(np.int64) @ x.astype(np.int64))
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=50, deadline=None)
+    @given(h_tile=st.integers(0, 300), w_tile=st.integers(0, 60),
+           n_wtiles=st.integers(1, 61), split=st.integers(1, 4))
+    def test_tile_addresses_disjoint(h_tile, w_tile, n_wtiles, split):
+        _check_tile_addresses_disjoint(h_tile, w_tile, n_wtiles, split)
+
+    @settings(max_examples=20, deadline=None)
+    @given(h=st.integers(1, 400), w=st.integers(1, 3000),
+           di=st.integers(0, len(ALL_DTYPES) - 1), reshape=st.booleans())
+    def test_layout_covers_all_tiles(h, w, di, reshape):
+        _check_layout_covers_all_tiles(h, w, di, reshape)
+
+    @settings(max_examples=10, deadline=None)
+    @given(h=st.integers(1, 200), w=st.integers(1, 1200),
+           reshape=st.booleans())
+    def test_cosim_random_geometry(h, w, reshape):
+        _check_cosim_random_geometry(h, w, reshape)
+else:                      # deterministic fallback when hypothesis absent
+    def test_tile_addresses_disjoint():
+        rng = np.random.default_rng(11)
+        for _ in range(40):
+            _check_tile_addresses_disjoint(
+                int(rng.integers(0, 301)), int(rng.integers(0, 61)),
+                int(rng.integers(1, 62)), int(rng.integers(1, 5)))
+
+    def test_layout_covers_all_tiles():
+        rng = np.random.default_rng(12)
+        for _ in range(12):
+            _check_layout_covers_all_tiles(
+                int(rng.integers(1, 401)), int(rng.integers(1, 3001)),
+                int(rng.integers(0, len(ALL_DTYPES))),
+                bool(rng.integers(0, 2)))
+
+    def test_cosim_random_geometry():
+        rng = np.random.default_rng(13)
+        for _ in range(6):
+            _check_cosim_random_geometry(
+                int(rng.integers(1, 201)), int(rng.integers(1, 1201)),
+                bool(rng.integers(0, 2)))
