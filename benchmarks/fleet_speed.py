@@ -9,6 +9,9 @@ on/off, PIM + baseline points):
 * ``fleet/sweep_*`` — end to end: a per-call ``run_gemv``/``run_baseline``
   loop vs one ``PimExecutor.run_many`` (includes stream building, which
   both paths share).
+* ``fleet/specs_*`` — the spec-lifted facade: a (4 SystemSpec variants x
+  shapes) design grid as per-variant executors + per-point calls vs ONE
+  heterogeneous ``run_many`` fleet.
 
 Also asserts the batched cycle counts are bit-identical to the looped
 ones, so the speedup rows in BENCH_*.json always track a correct result.
@@ -20,9 +23,9 @@ import time
 import numpy as np
 
 from repro.core import engine
-from repro.core.timing import DEFAULT_SYSTEM
+from repro.core.timing import DEFAULT_SYSTEM, LpddrTimings, SystemSpec
 from repro.pimkernel.executor import GemvRequest, PimExecutor
-from repro.pimkernel.tileconfig import ALL_DTYPES
+from repro.pimkernel.tileconfig import ALL_DTYPES, PimDType
 
 DIMS = [512, 1024, 2048, 4096, 8192]
 BASE = 4096
@@ -52,15 +55,16 @@ def main() -> dict:
 
     # Build all streams once; both resolve paths time the same arrays.
     planned = ex.plan_many(reqs)
-    points = [(ex.cyc, p.streams) for p in planned]
+    cyc = planned[0].ctx.cyc
+    points = [(p.ctx.cyc, p.streams) for p in planned]
 
     # Warm the compile caches of both paths (compilation is a one-time
     # cost shared across every spec variant; we measure steady state).
-    engine.run_streams(ex.cyc, planned[0].streams)
+    engine.run_streams(cyc, planned[0].streams)
     engine.resolve_fleet(points)
 
     t0 = time.perf_counter()
-    looped = [engine.run_streams(ex.cyc, p.streams)[1] for p in planned]
+    looped = [engine.run_streams(p.ctx.cyc, p.streams)[1] for p in planned]
     resolve_loop_s = time.perf_counter() - t0
 
     t0 = time.perf_counter()
@@ -103,9 +107,46 @@ def main() -> dict:
     print(f"fleet/sweep_speedup,{sweep_batch_s*1e3:.1f},"
           f"{sweep_loop_s/sweep_batch_s:.1f}")
 
+    # Spec-lifted facade: a heterogeneous (spec x shape x kind) design
+    # grid through one run_many vs per-variant executors.
+    specs = [DEFAULT_SYSTEM] + [
+        SystemSpec(timings=LpddrTimings(tRCD=20.0 + 2 * i,
+                                        tRP=20.0 + 2 * i))
+        for i in range(3)]
+    grid = [r for sp in specs for d in DIMS
+            for r in (GemvRequest.pim(BASE, d, PimDType.W8A8, spec=sp),
+                      GemvRequest.baseline(BASE, d, PimDType.W8A8,
+                                           spec=sp))]
+    m = len(grid)
+
+    t0 = time.perf_counter()
+    spec_loop = []
+    for sp in specs:
+        ex_sp = PimExecutor(sp)
+        spec_loop += [ex_sp.run_gemv(r.H, r.W, r.dtype)
+                      if r.kind == "pim" else
+                      ex_sp.run_baseline(r.H, r.W, r.dtype)
+                      for r in grid if r.spec == sp]
+    specs_loop_s = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    spec_batch = PimExecutor().run_many(grid)
+    specs_batch_s = time.perf_counter() - t0
+
+    for a, b in zip(spec_loop, spec_batch):
+        assert a.cycles == b.cycles
+
+    print(f"fleet/specs_looped,{specs_loop_s*1e6/m:.1f},"
+          f"{m/specs_loop_s:.1f}")
+    print(f"fleet/specs_batched,{specs_batch_s*1e6/m:.1f},"
+          f"{m/specs_batch_s:.1f}")
+    print(f"fleet/specs_speedup,{specs_batch_s*1e3:.1f},"
+          f"{specs_loop_s/specs_batch_s:.1f}")
+
     return dict(points=n,
                 resolve_speedup=resolve_loop_s / resolve_batch_s,
                 sweep_speedup=sweep_loop_s / sweep_batch_s,
+                specs_speedup=specs_loop_s / specs_batch_s,
                 sweep_batched_s=sweep_batch_s,
                 sweep_looped_s=sweep_loop_s)
 

@@ -352,38 +352,35 @@ class FleetResult:
     totals: np.ndarray          # (n_channels,) int32 total cycles
 
 
-def resolve_fleet(
-    points: Sequence[tuple[TimingCycles, Iterable[np.ndarray]]]
-) -> list[FleetResult]:
-    """Resolve many (timing config, per-channel streams) points at once.
+def resolve_lanes(
+    lanes: Sequence[tuple[TimingCycles, np.ndarray]]
+) -> list[tuple[np.ndarray, int]]:
+    """Resolve a flat list of (timing config, stream) lanes.
 
-    The flat *(point x channel)* fleet is deduplicated lane-wise (equal
-    (config, stream) lanes — e.g. the replicated baseline channels —
-    resolve once), grouped by ``(num_banks, length bucket)``, and each
+    This is the primitive under ``resolve_fleet``: lanes are deduplicated
+    (equal (config, stream) lanes — e.g. the replicated baseline channels
+    — resolve once), grouped by ``(num_banks, length bucket)``, and each
     group becomes one vmapped engine call per <=128-lane slab with NOP
-    tail padding (semantics-preserving: NOP advances nothing).  Points
-    may use *different* ``TimingCycles`` — the config rides along the
-    fleet axis as traced data.  This absorbs the old ``run_fleet`` helper
-    and is the single resolution path for every layer above.
+    tail padding (semantics-preserving: NOP advances nothing).  Lanes may
+    use *different* ``TimingCycles`` — the config rides along the fleet
+    axis as traced data.  Returns ``(issue cycles, total cycles)`` per
+    lane, in input order.
     """
     uniq_cyc: list[TimingCycles] = []
     uniq_stream: list[np.ndarray] = []
     lane_of: list[int] = []            # flat lane -> unique lane
-    owner: list[tuple[int, int]] = []
     uniq_index: dict = {}
-    for pi, (cyc, streams) in enumerate(points):
-        for ci, s in enumerate(streams):
-            s = np.ascontiguousarray(s, dtype=np.int32)
-            key = (cyc, s.shape[0],
-                   hashlib.blake2b(s.tobytes(), digest_size=16).digest())
-            u = uniq_index.get(key)
-            if u is None:
-                u = len(uniq_stream)
-                uniq_index[key] = u
-                uniq_cyc.append(cyc)
-                uniq_stream.append(s)
-            lane_of.append(u)
-            owner.append((pi, ci))
+    for cyc, s in lanes:
+        s = np.ascontiguousarray(s, dtype=np.int32)
+        key = (cyc, s.shape[0],
+               hashlib.blake2b(s.tobytes(), digest_size=16).digest())
+        u = uniq_index.get(key)
+        if u is None:
+            u = len(uniq_stream)
+            uniq_index[key] = u
+            uniq_cyc.append(cyc)
+            uniq_stream.append(s)
+        lane_of.append(u)
 
     groups: dict[tuple[int, int], list[int]] = {}
     for i, (cyc, s) in enumerate(zip(uniq_cyc, uniq_stream)):
@@ -411,13 +408,34 @@ def resolve_fleet(
                 issues[i] = iss[row, : uniq_stream[i].shape[0]].copy()
                 totals[i] = tot[row]
 
+    return [(issues[lane_of[i]], int(totals[lane_of[i]]))
+            for i in range(len(lane_of))]
+
+
+def resolve_fleet(
+    points: Sequence[tuple[TimingCycles, Iterable[np.ndarray]]]
+) -> list[FleetResult]:
+    """Resolve many (timing config, per-channel streams) points at once.
+
+    Flattens the *(point x channel)* fleet into lanes, resolves them with
+    one :func:`resolve_lanes` pass (dedupe + bucketed vmapped engine
+    calls), and regroups per point.  This absorbs the old ``run_fleet``
+    helper and is the single resolution path for every layer above.
+    """
+    flat: list[tuple[TimingCycles, np.ndarray]] = []
+    owner: list[int] = []
+    for pi, (cyc, streams) in enumerate(points):
+        for s in streams:
+            flat.append((cyc, s))
+            owner.append(pi)
+
+    resolved = resolve_lanes(flat)
     out = [FleetResult(issue=[], totals=np.zeros(0, np.int32))
            for _ in points]
     per_point: list[list[int]] = [[] for _ in points]
-    for lane, (pi, _ci) in enumerate(owner):
-        u = lane_of[lane]
-        out[pi].issue.append(issues[u])
-        per_point[pi].append(int(totals[u]))
+    for pi, (iss, tot) in zip(owner, resolved):
+        out[pi].issue.append(iss)
+        per_point[pi].append(tot)
     for pi, fr in enumerate(out):
         fr.totals = np.asarray(per_point[pi], dtype=np.int32)
     return out

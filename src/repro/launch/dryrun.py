@@ -265,6 +265,47 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
     return rec
 
 
+def pim_offload_report(arch: str, batches=(1, 2, 4, 8, 16)) -> dict:
+    """Decode-phase PIM offload telemetry across a hardware-variant grid.
+
+    One ``OffloadPlanner.plan_grid`` call — i.e. a single batched engine
+    dispatch — covers every (spec variant x GEMV site) point of this
+    model; per variant we record the plan and the end-to-end decode-step
+    speedup curve over batch sizes.  Writes
+    experiments/dryrun/pim/<arch>.json.
+    """
+    import dataclasses as _dc
+
+    from repro.core.timing import DEFAULT_SYSTEM, LpddrTimings, PimSpec, \
+        SystemSpec
+    from repro.serving.offload import OffloadPlanner
+
+    variants = {
+        "lp5x-9600": DEFAULT_SYSTEM,
+        "fast-core": SystemSpec(timings=LpddrTimings(tRCD=15.0, tRP=15.0)),
+        "mac2": SystemSpec(pim=PimSpec(mac_interval_ck=2)),
+        "srf1k": SystemSpec(pim=PimSpec(srf_bytes=1024)),
+    }
+    planner = OffloadPlanner(ARCHS[arch])
+    grid = planner.plan_grid(list(variants.values()))
+    rec: dict = dict(arch=arch, variants={})
+    for (name, spec), decisions in zip(variants.items(), grid):
+        rec["variants"][name] = dict(
+            sites=[{**_dc.asdict(d.site), "pim_ns": d.pim_ns,
+                    "host_ns": d.host_ns, "reshape": d.reshape,
+                    "offload_below_batch": d.offload_below_batch}
+                   for d in decisions],
+            # str keys: the in-memory record matches its JSON round-trip
+            decode_speedup={str(b): planner.decode_speedup(batch=b,
+                                                           spec=spec)
+                            for b in batches},
+        )
+    out_dir = OUT_DIR / "pim"
+    out_dir.mkdir(parents=True, exist_ok=True)
+    (out_dir / f"{arch}.json").write_text(json.dumps(rec, indent=1))
+    return rec
+
+
 def all_cells() -> list[tuple[str, str]]:
     cells = []
     for arch, cfg in ARCHS.items():
@@ -282,11 +323,28 @@ def main() -> None:
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--skip-existing", action="store_true")
     ap.add_argument("--variant", default="baseline")
+    ap.add_argument("--pim", action="store_true",
+                    help="emit decode-phase PIM offload telemetry per arch "
+                         "(multi-spec grid, one batched engine query) "
+                         "instead of lowering/compiling cells")
     ap.add_argument("--extrap-only", action="store_true",
                     help="recompute the probe extrapolation of existing "
                          "cells (methodology changes) without the full "
                          "compile")
     args = ap.parse_args()
+
+    if args.pim:
+        if not args.all and args.arch not in ARCHS:
+            ap.error(f"--pim needs --all or --arch from {list(ARCHS)}")
+        archs = list(ARCHS) if args.all else [args.arch]
+        for arch in archs:
+            rec = pim_offload_report(arch)
+            base = rec["variants"]["lp5x-9600"]["decode_speedup"]["1"]
+            print(f"[pim] {arch}: decode b=1 speedup "
+                  f"{base['speedup']:.2f}x, "
+                  f"{len(base['offloaded'])}/{base['n_sites']} sites",
+                  flush=True)
+        sys.exit(0)
 
     meshes = {"pod1": [False], "pod2": [True],
               "both": [False, True]}[args.mesh]

@@ -25,7 +25,6 @@ import numpy as np
 
 from repro.core import commands as C
 from repro.core.commands import StreamBuilder
-from repro.core.timing import SystemSpec
 from . import codegen
 from .control import FencePolicy, PimControl
 from .datamapper import PimLayout
@@ -44,8 +43,7 @@ class GemvStreams:
 
 
 class GemvKernel:
-    def __init__(self, spec: SystemSpec):
-        self.spec = spec
+    """Stateless stream synthesizer: the spec rides on the layout."""
 
     def build(self, layout: PimLayout, program: codegen.PimProgram,
               x: np.ndarray | None = None,
@@ -57,15 +55,15 @@ class GemvKernel:
         the paper's "accumulation register-to-DRAM data movements"), the
         host reading y later with normal SB reads.
         """
-        tc = layout.tc
-        page = self.spec.timings.page_bytes
+        spec = layout.spec
+        page = spec.timings.page_bytes
         xpad = None
         if x is not None:
             xpad = np.zeros(layout.padded_w, dtype=np.asarray(x).dtype)
             xpad[: layout.W] = x
 
         streams, payloads = [], []
-        for ch in range(self.spec.num_channels):
+        for ch in range(spec.num_channels):
             b = StreamBuilder()
             pay: dict[int, np.ndarray] = {}
             ctl = PimControl(b, FencePolicy(per_tile=fence))

@@ -18,8 +18,11 @@ from __future__ import annotations
 
 import dataclasses
 
+from typing import Sequence
+
 from repro.configs.base import ArchConfig
 from repro.core.pimsim import PimSimulator
+from repro.core.timing import SystemSpec
 from repro.pimkernel.executor import GemvRequest
 from repro.pimkernel.tileconfig import PimDType
 
@@ -85,39 +88,53 @@ class OffloadPlanner:
         self.cfg = cfg
         self.sim = sim or PimSimulator()
         self.dtype = dtype
-        self._plans: dict[bool, list[OffloadDecision]] = {}
+        self._plans: dict[tuple, list[OffloadDecision]] = {}
 
-    def plan(self, fence: bool = True) -> list[OffloadDecision]:
-        """Offload decision per GEMV site.
+    def plan_grid(self, specs: Sequence[SystemSpec],
+                  fence: bool = True) -> list[list[OffloadDecision]]:
+        """Offload decisions for the whole (spec x site) grid at once.
 
-        All per-site PIM and host-baseline telemetry queries are batched
-        into one fleet request — a single engine dispatch covers the whole
-        model — and the resulting plan is cached per fence setting.
+        Every hardware variant's per-site PIM and host-baseline telemetry
+        queries are batched into one fleet request — a single engine
+        dispatch covers the entire design-space grid for this model —
+        and each variant's plan is cached under its (spec, fence) key.
+        Returns one decision list per spec, in input order.
         """
-        if fence in self._plans:
-            return self._plans[fence]
+        specs = [sp or self.sim.spec for sp in specs]
         sites = decode_gemv_sites(self.cfg)
         reshapes = [site.h < 2048 for site in sites]   # §3.3 regime
+        todo = [sp for sp in dict.fromkeys(specs)
+                if (sp, fence) not in self._plans]
         reqs = []
-        for site, reshape in zip(sites, reshapes):
-            reqs.append(GemvRequest.pim(site.h, site.w, self.dtype,
-                                        fence=fence, reshape=reshape))
-            reqs.append(GemvRequest.baseline(site.h, site.w, self.dtype))
-        res = self.sim.run_many(reqs)
-        out = []
-        for site, reshape, (pim, base) in zip(sites, reshapes,
-                                              zip(res[::2], res[1::2])):
-            crossover = max(1, int(base.ns / pim.ns))
-            out.append(OffloadDecision(site=site, pim_ns=pim.ns,
-                                       host_ns=base.ns, reshape=reshape,
-                                       offload_below_batch=crossover))
-        self._plans[fence] = out
-        return out
+        for sp in todo:
+            for site, reshape in zip(sites, reshapes):
+                reqs.append(GemvRequest.pim(site.h, site.w, self.dtype,
+                                            fence=fence, reshape=reshape,
+                                            spec=sp))
+                reqs.append(GemvRequest.baseline(site.h, site.w,
+                                                 self.dtype, spec=sp))
+        res = iter(self.sim.run_many(reqs))
+        for sp in todo:
+            out = []
+            for site, reshape in zip(sites, reshapes):
+                pim, base = next(res), next(res)
+                crossover = max(1, int(base.ns / pim.ns))
+                out.append(OffloadDecision(site=site, pim_ns=pim.ns,
+                                           host_ns=base.ns, reshape=reshape,
+                                           offload_below_batch=crossover))
+            self._plans[(sp, fence)] = out
+        return [self._plans[(sp, fence)] for sp in specs]
 
-    def decode_speedup(self, batch: int = 1, fence: bool = True) -> dict:
+    def plan(self, fence: bool = True,
+             spec: SystemSpec | None = None) -> list[OffloadDecision]:
+        """Offload decision per GEMV site (one spec of the grid path)."""
+        return self.plan_grid([spec or self.sim.spec], fence=fence)[0]
+
+    def decode_speedup(self, batch: int = 1, fence: bool = True,
+                       spec: SystemSpec | None = None) -> dict:
         """End-to-end decode-step speedup from offloading (Amdahl over
         all GEMV sites; cached weights on host amortize over batch)."""
-        decisions = self.plan(fence=fence)
+        decisions = self.plan(fence=fence, spec=spec)
         host_total = sum(d.host_ns * d.site.count for d in decisions)
         mixed_total = 0.0
         offloaded = []
