@@ -1,0 +1,25 @@
+"""Force one XLA host device per core before JAX initializes.
+
+The engine's multi-device lane sharding parallelizes fleet resolution
+across `jax.devices()`; on a stock CPU backend that is one device, so
+the benchmark entry points turn a multi-core host into a (<= ``cap``)
+device fleet.  No-op once JAX is imported or when the flag is already
+set by the caller's environment.
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+
+def force_host_devices(cap: int = 4) -> None:
+    if "jax" in sys.modules:
+        return
+    if "--xla_force_host_platform_device_count" in \
+            os.environ.get("XLA_FLAGS", ""):
+        return
+    n = min(cap, os.cpu_count() or 1)
+    if n > 1:
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "")
+            + f" --xla_force_host_platform_device_count={n}").strip()

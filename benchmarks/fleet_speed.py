@@ -1,8 +1,11 @@
 """Fleet-throughput benchmark: batched vs looped sweep resolution.
 
-Two comparisons over the full Fig. 4 grid (both axes, all dtypes, fence
+Comparisons over the full Fig. 4 grid (both axes, all dtypes, fence
 on/off, PIM + baseline points):
 
+* ``fleet/plan_*`` — the Python planning side alone: per-command
+  ``StreamBuilder`` reference synthesis vs the vectorized block
+  synthesizer (byte-identical streams, asserted).
 * ``fleet/resolve_*`` — the execution core alone: per-point
   ``engine.run_streams`` loop vs one ``engine.resolve_fleet`` call on the
   same prebuilt streams (isolates the dispatch/batching win).
@@ -12,33 +15,54 @@ on/off, PIM + baseline points):
 * ``fleet/specs_*`` — the spec-lifted facade: a (4 SystemSpec variants x
   shapes) design grid as per-variant executors + per-point calls vs ONE
   heterogeneous ``run_many`` fleet.
+* ``fleet/serve_replan_*`` — repeated serving-loop telemetry queries
+  (fresh planner per query, the replan pattern) with the resolved-lane
+  LRU disabled vs enabled.
 
-Also asserts the batched cycle counts are bit-identical to the looped
-ones, so the speedup rows in BENCH_*.json always track a correct result.
+The resolved-lane cache is cleared before every timed resolution section
+so the ``resolve``/``sweep``/``specs`` rows measure real engine work on
+both sides; ``serve_replan`` is the row that measures the cache itself.
+Batched cycle counts are asserted bit-identical to the looped ones, so
+the speedup rows in BENCH_*.json always track a correct result.
+
+When run before JAX initializes, the process forces one XLA host device
+per core (up to 4) so the engine's multi-device lane sharding is
+exercised — the rows then measure the sharded fleet path with its
+single-device fallback still covered by CI's default job.
 """
 from __future__ import annotations
+
+import sys
+
+try:
+    from ._xla_host_devices import force_host_devices
+except ImportError:          # run as a script: benchmarks/ is sys.path[0]
+    from _xla_host_devices import force_host_devices
+force_host_devices()
 
 import time
 
 import numpy as np
 
 from repro.core import engine
+from repro.core.pimsim import PimSimulator
 from repro.core.timing import DEFAULT_SYSTEM, LpddrTimings, SystemSpec
-from repro.pimkernel.executor import GemvRequest, PimExecutor
+from repro.pimkernel.executor import GemvRequest, PimExecutor, spec_context
 from repro.pimkernel.tileconfig import ALL_DTYPES, PimDType
 
 DIMS = [512, 1024, 2048, 4096, 8192]
+QUICK_DIMS = [512, 1024, 2048]
 BASE = 4096
 
 
-def fig4_grid() -> list[GemvRequest]:
+def fig4_grid(dims=None) -> list[GemvRequest]:
     """Every (axis, dtype, dim, fence) point of Fig. 4 + its baseline."""
     reqs: list[GemvRequest] = []
     seen: set = set()
     for fence in (False, True):
         for axis in ("activation", "output"):
             for dt in ALL_DTYPES:
-                for d in DIMS:
+                for d in dims or DIMS:
                     H, W = (BASE, d) if axis == "activation" else (d, BASE)
                     for r in (GemvRequest.pim(H, W, dt, fence=fence),
                               GemvRequest.baseline(H, W, dt)):
@@ -48,10 +72,41 @@ def fig4_grid() -> list[GemvRequest]:
     return reqs
 
 
-def main() -> dict:
+def main(quick: bool = False) -> dict:
+    dims = QUICK_DIMS if quick else DIMS
     ex = PimExecutor(DEFAULT_SYSTEM)
-    reqs = fig4_grid()
+    reqs = fig4_grid(dims)
     n = len(reqs)
+
+    # ---- planning: vectorized block synthesis vs StreamBuilder oracle --
+    pim_reqs = [r for r in reqs if r.kind == "pim"]
+    plans = [ex.plan(r.H, r.W, r.dtype, reshape=r.reshape) for r in pim_reqs]
+
+    t0 = time.perf_counter()
+    ref_streams = [
+        spec_context(layout.spec).kernel.build_reference(
+            layout, program, fence=r.fence, flush=r.flush)
+        for r, (layout, program) in zip(pim_reqs, plans)]
+    plan_ref_s = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    vec_streams = [
+        spec_context(layout.spec).kernel.build(
+            layout, program, fence=r.fence, flush=r.flush)
+        for r, (layout, program) in zip(pim_reqs, plans)]
+    plan_vec_s = time.perf_counter() - t0
+
+    for gr, gv in zip(ref_streams, vec_streams):
+        for a, b in zip(gr.streams, gv.streams):
+            np.testing.assert_array_equal(a, b)
+
+    m_pim = len(pim_reqs)
+    print(f"fleet/plan_reference,{plan_ref_s*1e6/m_pim:.1f},"
+          f"{m_pim/plan_ref_s:.1f}")
+    print(f"fleet/plan_vectorized,{plan_vec_s*1e6/m_pim:.1f},"
+          f"{m_pim/plan_vec_s:.1f}")
+    print(f"fleet/plan_speedup,{plan_vec_s*1e3:.1f},"
+          f"{plan_ref_s/plan_vec_s:.1f}")
 
     # Build all streams once; both resolve paths time the same arrays.
     planned = ex.plan_many(reqs)
@@ -63,10 +118,12 @@ def main() -> dict:
     engine.run_streams(cyc, planned[0].streams)
     engine.resolve_fleet(points)
 
+    engine.lane_cache_clear()
     t0 = time.perf_counter()
     looped = [engine.run_streams(p.ctx.cyc, p.streams)[1] for p in planned]
     resolve_loop_s = time.perf_counter() - t0
 
+    engine.lane_cache_clear()
     t0 = time.perf_counter()
     fleet = engine.resolve_fleet(points)
     resolve_batch_s = time.perf_counter() - t0
@@ -82,7 +139,11 @@ def main() -> dict:
           f"{resolve_loop_s/resolve_batch_s:.1f}")
 
     # End to end: fresh executors so neither path reuses built streams.
+    # Warm the keyed fleet path too (its dedupe can produce slab shapes
+    # the unkeyed warm-up above never compiled).
+    PimExecutor(DEFAULT_SYSTEM).run_many(reqs)
     ex_loop = PimExecutor(DEFAULT_SYSTEM)
+    engine.lane_cache_clear()
     t0 = time.perf_counter()
     solo_res = [
         ex_loop.run_gemv(r.H, r.W, r.dtype, fence=r.fence,
@@ -93,6 +154,7 @@ def main() -> dict:
     sweep_loop_s = time.perf_counter() - t0
 
     ex_batch = PimExecutor(DEFAULT_SYSTEM)
+    engine.lane_cache_clear()
     t0 = time.perf_counter()
     batch_res = ex_batch.run_many(reqs)
     sweep_batch_s = time.perf_counter() - t0
@@ -113,12 +175,14 @@ def main() -> dict:
         SystemSpec(timings=LpddrTimings(tRCD=20.0 + 2 * i,
                                         tRP=20.0 + 2 * i))
         for i in range(3)]
-    grid = [r for sp in specs for d in DIMS
+    grid = [r for sp in specs for d in dims
             for r in (GemvRequest.pim(BASE, d, PimDType.W8A8, spec=sp),
                       GemvRequest.baseline(BASE, d, PimDType.W8A8,
                                            spec=sp))]
     m = len(grid)
+    PimExecutor().run_many(grid)     # warm the heterogeneous slab shapes
 
+    engine.lane_cache_clear()
     t0 = time.perf_counter()
     spec_loop = []
     for sp in specs:
@@ -129,6 +193,7 @@ def main() -> dict:
                       for r in grid if r.spec == sp]
     specs_loop_s = time.perf_counter() - t0
 
+    engine.lane_cache_clear()
     t0 = time.perf_counter()
     spec_batch = PimExecutor().run_many(grid)
     specs_batch_s = time.perf_counter() - t0
@@ -143,13 +208,49 @@ def main() -> dict:
     print(f"fleet/specs_speedup,{specs_batch_s*1e3:.1f},"
           f"{specs_loop_s/specs_batch_s:.1f}")
 
+    # Serving replan loop: fresh planner per query (so the planner's own
+    # plan cache cannot hide engine work), resolved-lane LRU off vs on.
+    from repro.configs import ARCHS
+    from repro.serving.offload import OffloadPlanner
+    cfg = ARCHS["mamba2-130m"]
+    reps = 2
+
+    def replan_once() -> float:
+        return OffloadPlanner(cfg, PimSimulator()).decode_speedup(
+            batch=4)["speedup"]
+
+    engine.configure_lane_cache(0)          # disabled
+    replan_once()                           # warm engine compiles
+    t0 = time.perf_counter()
+    cold = [replan_once() for _ in range(reps)]
+    replan_cold_s = (time.perf_counter() - t0) / reps
+
+    engine.configure_lane_cache(4096)       # enabled, then warmed
+    replan_once()
+    t0 = time.perf_counter()
+    warm = [replan_once() for _ in range(reps)]
+    replan_warm_s = (time.perf_counter() - t0) / reps
+
+    assert cold == warm, "lane cache must not change telemetry results"
+
+    print(f"fleet/serve_replan_cold,{replan_cold_s*1e6:.1f},"
+          f"{1/replan_cold_s:.2f}")
+    print(f"fleet/serve_replan_cached,{replan_warm_s*1e6:.1f},"
+          f"{1/replan_warm_s:.2f}")
+    print(f"fleet/serve_replan_speedup,{replan_warm_s*1e3:.1f},"
+          f"{replan_cold_s/replan_warm_s:.1f}")
+
     return dict(points=n,
+                devices=len(engine.lane_devices()),
+                plan_speedup=plan_ref_s / plan_vec_s,
                 resolve_speedup=resolve_loop_s / resolve_batch_s,
                 sweep_speedup=sweep_loop_s / sweep_batch_s,
                 specs_speedup=specs_loop_s / specs_batch_s,
+                serve_replan_speedup=replan_cold_s / replan_warm_s,
+                plan_batched_s=plan_vec_s,
                 sweep_batched_s=sweep_batch_s,
                 sweep_looped_s=sweep_loop_s)
 
 
 if __name__ == "__main__":
-    main()
+    main(quick="--quick" in sys.argv)

@@ -6,11 +6,18 @@ Prints ``name,us_per_call,derived`` CSV rows:
   reshape/*    — reshape-optimization gain          (paper §3.3)
   target/*     — deviation vs published 4096 numbers
   engine/*     — cycle-engine throughput (JAX vs oracle)
-  fleet/*      — batched vs looped sweep resolution (fleet API)
+  fleet/*      — planning/resolution split, batched vs looped sweeps,
+                 serve-replan lane-cache rows (fleet API)
   offload/*    — LLM decode offload case study (framework layer)
   roofline/*   — dominant term + roofline fraction per dry-run cell
 """
 from __future__ import annotations
+
+# One XLA host device per core (up to 4), set before JAX initializes, so
+# the fleet rows exercise the engine's multi-device lane sharding.
+from ._xla_host_devices import force_host_devices
+
+force_host_devices()
 
 
 def main() -> None:

@@ -64,6 +64,25 @@ OP_NAMES = [
 ]
 
 
+def single(op: int, a: int = 0, b: int = 0, c: int = 0) -> np.ndarray:
+    """One command as a (1, 4) int32 block."""
+    return np.array([[op, a, b, c]], dtype=np.int32)
+
+
+def repeat_block(op: int, count: int, a: int = 0, b: int = 0,
+                 c_start: int = 0, c_step: int = 1) -> np.ndarray:
+    """``count`` commands with a striding last field as one (count, 4)
+    block — the vectorized building brick shared by :class:`StreamBuilder`
+    and the block-synthesizing GEMV kernel."""
+    block = np.empty((max(count, 0), 4), dtype=np.int32)
+    if count > 0:
+        block[:, 0] = op
+        block[:, 1] = a
+        block[:, 2] = b
+        block[:, 3] = c_start + c_step * np.arange(count, dtype=np.int32)
+    return block
+
+
 class StreamBuilder:
     """Append-only builder for command streams (numpy int32 (N,4))."""
 
@@ -74,7 +93,7 @@ class StreamBuilder:
         self._n = 0
 
     def emit(self, op: int, a: int = 0, b: int = 0, c: int = 0) -> None:
-        self._chunks.append(np.array([[op, a, b, c]], dtype=np.int32))
+        self._chunks.append(single(op, a, b, c))
         self._n += 1
 
     def emit_block(self, arr: np.ndarray) -> None:
@@ -87,12 +106,7 @@ class StreamBuilder:
         """Emit ``count`` commands with a striding last field (vectorized)."""
         if count <= 0:
             return
-        block = np.empty((count, 4), dtype=np.int32)
-        block[:, 0] = op
-        block[:, 1] = a
-        block[:, 2] = b
-        block[:, 3] = c_start + c_step * np.arange(count, dtype=np.int32)
-        self._chunks.append(block)
+        self._chunks.append(repeat_block(op, count, a, b, c_start, c_step))
         self._n += count
 
     def __len__(self) -> int:

@@ -1,10 +1,14 @@
-"""Mixture-of-Experts block: top-k routing with capacity-factor dispatch.
+"""Mixture-of-Experts block: top-k routing, dropless by default.
 
 GShard-style position-in-expert dispatch (one (N, E) cumsum per top-k
 slot) — O(N·E) intermediates, no (N, E, C) dispatch tensors and no global
-sort, which keeps the 1M-token train_4k cells compilable.  Experts are
-sharded on the model axis; the scatters/gathers lower to the expected
-all-to-all-class collectives under SPMD.
+sort.  Capacity is derived from the flattened token count so it never
+binds (routing is batching-invariant — prefill, teacher-forced decode
+and B>1 decode steps agree exactly); pass ``drop_tokens=True`` to get
+the legacy capacity-factor-bounded buffer for memory-constrained
+training (the 1M-token train_4k cells).  Experts are sharded on the
+model axis; the scatters/gathers lower to the expected all-to-all-class
+collectives under SPMD.
 """
 from __future__ import annotations
 
@@ -54,8 +58,23 @@ def moe_logical(mlp_kind: str):
 
 
 def moe_apply(params, x, *, top_k: int, capacity_factor: float,
-              mlp_kind: str):
-    """x: (B, S, d) -> (B, S, d), plus aux load-balancing loss."""
+              mlp_kind: str, drop_tokens: bool = False):
+    """x: (B, S, d) -> (B, S, d), plus aux load-balancing loss.
+
+    Routing is *dropless* by default: expert capacity is derived from the
+    flattened token count ``n`` such that it can never bind — a token
+    lands in a given expert through at most one of its (distinct) top-k
+    slots, so ``cap = n`` always holds every assignment.  That makes the
+    routing decision independent of how the same tokens are batched,
+    which is what prefill/decode consistency requires: the legacy
+    per-call GShard capacity ``ceil(n*k*cf/e)`` shrank with ``n``, so a
+    decode-shaped call (B, S=1) silently dropped batch rows > 0 whose
+    position-in-expert (a cumsum across the flattened *batch* rows)
+    overflowed the tiny per-step capacity (see
+    ``test_moe_decode_drops_batch_rows``).  ``drop_tokens=True`` restores
+    the capacity-factor-bounded dispatch buffer for memory-constrained
+    training runs (the 1M-token train_4k cells), accepting the drops.
+    """
     b, s, d = x.shape
     e = params["router"].shape[-1]
     n = b * s
@@ -66,7 +85,8 @@ def moe_apply(params, x, *, top_k: int, capacity_factor: float,
     gate_vals = gate_vals / jnp.maximum(
         gate_vals.sum(-1, keepdims=True), 1e-9)
 
-    cap = int(max(1, math.ceil(n * top_k * capacity_factor / e)))
+    cap = int(max(1, math.ceil(n * top_k * capacity_factor / e))) \
+        if drop_tokens else n
 
     # GShard dispatch: per top-k slot, position-in-expert via cumsum.
     buf = _constrain(jnp.zeros((e * cap, d), xt.dtype), DISPATCH_SPEC)

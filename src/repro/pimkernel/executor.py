@@ -117,11 +117,17 @@ class GemvRequest:
 
 @dataclasses.dataclass
 class PlannedGemv:
-    """A request with its layouts/programs/streams built, ready to time."""
+    """A request with its layouts/programs/streams built, ready to time.
+
+    ``stream_keys`` carries one structural identity per channel stream
+    (see ``GemvStreams.stream_keys``): the engine dedupes and LRU-caches
+    lanes by planner-provided key instead of hashing stream bytes.
+    """
 
     req: GemvRequest
     ctx: SpecContext
     streams: list[np.ndarray]
+    stream_keys: list | None = None
     gs: GemvStreams | None = None      # pim requests only
     weight_bytes: int = 0              # baseline requests only
 
@@ -224,9 +230,12 @@ class PimExecutor:
                 total_bytes = r.H * r.W * r.dtype.w_bits // 8
                 per_ch = -(-total_bytes // ctx.spec.num_channels)
                 stream = controller.sequential_read_stream(per_ch, ctx.spec)
+                # the stream is fully determined by (memory system, H, W,
+                # dtype) == r.key, identical across channels -> one lane
                 out.append(PlannedGemv(
                     req=r, ctx=ctx,
                     streams=[stream] * ctx.spec.num_channels,
+                    stream_keys=[r.key] * ctx.spec.num_channels,
                     weight_bytes=total_bytes))
             else:
                 layout, program = self.plan(r.H, r.W, r.dtype,
@@ -234,7 +243,7 @@ class PimExecutor:
                 gs = self.build_streams(layout, program, fence=r.fence,
                                         flush=r.flush)
                 out.append(PlannedGemv(req=r, ctx=ctx, streams=gs.streams,
-                                       gs=gs))
+                                       stream_keys=gs.stream_keys, gs=gs))
         return out
 
     def run_many(self, reqs: Sequence[GemvRequest]) -> list[PimResult]:
@@ -253,7 +262,9 @@ class PimExecutor:
             uniq.setdefault(r.key, r)
         planned = self.plan_many(uniq.values())
         fleet = engine.resolve_fleet(
-            [(p.ctx.cyc, p.streams) for p in planned])
+            [(p.ctx.cyc, p.streams) for p in planned],
+            keys=[p.stream_keys for p in planned],
+            need_issue=False)
         by_key = {p.req.key: self._finish(p, fr.totals)
                   for p, fr in zip(planned, fleet)}
         return [by_key[r.key] for r in reqs]
@@ -278,7 +289,9 @@ class PimExecutor:
             gs = self.build_streams(layout, program, x=it.x, fence=it.fence)
             plans.append((ctx, layout, program, dram, gs))
         fleet = engine.resolve_fleet(
-            [(ctx.cyc, gs.streams) for ctx, _l, _p, _d, gs in plans])
+            [(ctx.cyc, gs.streams) for ctx, _l, _p, _d, gs in plans],
+            keys=[gs.stream_keys for _c, _l, _p, _d, gs in plans],
+            need_issue=False)
         out = []
         for (ctx, layout, program, dram, gs), fr in zip(plans, fleet):
             y = device.execute_gemv(layout, program, dram, gs.streams,

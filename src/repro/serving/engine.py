@@ -37,7 +37,7 @@ class Request:
 class ServingEngine:
     def __init__(self, cfg: ArchConfig, params, slots: int = 4,
                  max_seq: int = 256, planner: Optional[OffloadPlanner]
-                 = None):
+                 = None, step_telemetry: bool = False):
         assert cfg.input_mode == "tokens", "engine serves token models"
         self.cfg, self.params = cfg, params
         self.slots = slots
@@ -49,6 +49,12 @@ class ServingEngine:
         self.planner = planner
         self.stats = dict(steps=0, tokens=0, prefills=0)
         self.batch_occupancy: dict[int, int] = {}
+        # Per-step PIM telemetry: one planner query per decode step at
+        # the step's true occupancy.  The first query per batch size does
+        # the (lane-cache-accelerated) fleet resolve; repeats are pure
+        # arithmetic over the cached offload decisions.
+        self.step_telemetry = step_telemetry
+        self.step_speedups: list[dict] = []
 
         self._decode = jax.jit(
             lambda p, c, t, pos: M.decode_step(cfg, p, c, t, pos))
@@ -97,9 +103,12 @@ class ServingEngine:
         pos = jnp.asarray(self.pos, jnp.int32)
         logits, self.cache = self._decode(self.params, self.cache,
                                           jnp.asarray(tokens), pos)
+        # one argmax over the whole batch on device, one host transfer —
+        # not a device->host sync per active slot
+        next_tok = np.asarray(jnp.argmax(logits, axis=-1)).reshape(-1)
         for i in act:
             req = self.active[i]
-            tok = int(jnp.argmax(logits[i]))
+            tok = int(next_tok[i])
             req.out.append(tok)
             self.pos[i] += 1
             self.stats["tokens"] += 1
@@ -107,6 +116,11 @@ class ServingEngine:
                     or self.pos[i] >= self.max_seq - 1):
                 req.done = True
                 self.active[i] = None
+        if self.planner is not None and self.step_telemetry:
+            tel = self.planner.decode_speedup(batch=len(act))
+            self.step_speedups.append(dict(step=self.stats["steps"],
+                                           batch=len(act),
+                                           speedup=tel["speedup"]))
         self.stats["steps"] += 1
         return True
 
@@ -124,5 +138,14 @@ class ServingEngine:
             tel["per_batch_speedup"] = {
                 b: self.planner.decode_speedup(batch=b)["speedup"]
                 for b in batches}
+            if self.batch_occupancy:
+                # occupancy-weighted offload: crossover per step, not per
+                # run — the batch-occupancy histogram weights each decode
+                # step's offload decision by its true batch size.
+                tel["occupancy_weighted"] = \
+                    self.planner.occupancy_weighted_speedup(
+                        self.batch_occupancy)
+            if self.step_speedups:
+                tel["per_step"] = list(self.step_speedups)
             out["pim_telemetry"] = tel
         return out

@@ -152,3 +152,29 @@ class OffloadPlanner:
                     speedup=host_total / max(mixed_total, 1e-9),
                     offloaded=offloaded,
                     n_sites=len(decisions))
+
+    def occupancy_weighted_speedup(self, occupancy: dict[int, int],
+                                   fence: bool = True,
+                                   spec: SystemSpec | None = None) -> dict:
+        """Decode-phase speedup under a batch-occupancy histogram.
+
+        ``occupancy`` maps decode batch size -> number of steps observed
+        at that size (``ServingEngine.batch_occupancy``).  Each step's
+        offload decision is taken at its *own* batch size — crossover per
+        step, not per run — and the host/mixed step times are weighted by
+        the histogram.  After the first ``plan`` (one batched, lane-
+        cache-accelerated fleet query) this is pure arithmetic over the
+        cached decisions, so it is cheap enough to recompute every run.
+        """
+        host_total = mixed_total = 0.0
+        per_batch = {}
+        steps = 0
+        for b, count in sorted(occupancy.items()):
+            tel = self.decode_speedup(batch=b, fence=fence, spec=spec)
+            per_batch[b] = tel["speedup"]
+            host_total += tel["host_ns"] * count
+            mixed_total += tel["mixed_ns"] * count
+            steps += count
+        return dict(steps=steps, host_ns=host_total, mixed_ns=mixed_total,
+                    speedup=host_total / max(mixed_total, 1e-9),
+                    per_batch_speedup=per_batch)

@@ -16,16 +16,6 @@ from repro.training.optimizer import adamw_init, adamw_update
 
 ARCH_IDS = list(ARCHS)
 
-# Pre-existing MoE serving bug (see test_moe_decode_drops_batch_rows for
-# the minimal repro): decode-step expert routing diverges from prefill
-# for batch rows > 0, because GShard capacity is derived from the
-# *call's* token count and position-in-expert accumulates across
-# flattened batch rows.  strict xfail pins the bug: the suite stays
-# green now and flags the moment a fix lands.
-MOE_DECODE_BUG = "ROADMAP.md open item: decode batch rows > 0 dropped " \
-    "by per-call MoE capacity (see test_moe_decode_drops_batch_rows)"
-MOE_DECODE_BROKEN = {"granite-moe-3b-a800m", "dbrx-132b"}
-
 
 def _smoke_batch(cfg, rng, b=2, s=32):
     batch = {}
@@ -74,11 +64,7 @@ def test_forward_and_train_step(arch):
     assert all(bool(x) for x in leaves), "non-finite grads"
 
 
-@pytest.mark.parametrize("arch", [
-    pytest.param(a, marks=pytest.mark.xfail(strict=True,
-                                            reason=MOE_DECODE_BUG))
-    if a in MOE_DECODE_BROKEN else a
-    for a in ARCH_IDS])
+@pytest.mark.parametrize("arch", ARCH_IDS)
 def test_prefill_decode_consistency(arch):
     """Teacher-forced decode logits == full-forward logits."""
     cfg = smoke_config(ARCHS[arch])
@@ -113,18 +99,17 @@ def test_prefill_decode_consistency(arch):
         rtol=2e-4, atol=2e-4)
 
 
-@pytest.mark.xfail(strict=True, reason=MOE_DECODE_BUG)
 def test_moe_decode_drops_batch_rows():
-    """Minimal repro of the prefill/decode MoE divergence.
+    """Regression test for the (fixed) prefill/decode MoE divergence.
 
-    A decode-shaped call (B, S=1) flattens to N = B tokens, so GShard
-    capacity is ceil(B * k * cf / e) — and position-in-expert is a
-    cumsum across the flattened *batch* rows.  Identical inputs in one
-    decode batch must produce identical outputs under any consistent
-    router; instead rows beyond the per-call capacity are silently
-    dropped (their expert contribution is zeroed), which is exactly why
-    prefill (N = B*S, ample capacity) and decode disagree for batch
-    rows > 0 in granite-moe-3b-a800m / dbrx-132b.
+    A decode-shaped call (B, S=1) flattens to N = B tokens; under the
+    legacy per-call GShard capacity (ceil(B * k * cf / e)) the
+    position-in-expert cumsum across flattened *batch* rows overflowed
+    the tiny per-step capacity and rows > 0 were silently dropped.
+    Capacity now derives from the flattened token count so it never
+    binds: identical inputs in one decode batch produce identical
+    outputs, and prefill/decode agree (the flipped strict xfails in
+    test_prefill_decode_consistency are the other half of this signal).
     """
     from repro.models import moe as MOE
     d, e, ff = 16, 4, 32
@@ -137,6 +122,22 @@ def test_moe_decode_drops_batch_rows():
     assert np.abs(y[0]).sum() > 0, "row 0 must route normally"
     np.testing.assert_allclose(y[3], y[0], rtol=1e-6, atol=1e-6,
                                err_msg="batch row 3 was capacity-dropped")
+
+
+def test_moe_drop_tokens_mode_keeps_capacity_bound():
+    """drop_tokens=True retains the legacy bounded dispatch buffer: with
+    cap = ceil(n*k*cf/e) = 1, duplicate rows routed to one expert must
+    drop — the memory-bound training tradeoff stays available."""
+    from repro.models import moe as MOE
+    d, e, ff = 16, 4, 32
+    params = MOE.moe_init(jax.random.PRNGKey(0), d, ff, e, "gelu")
+    row = jax.random.normal(jax.random.PRNGKey(1), (d,), jnp.float32)
+    x = jnp.broadcast_to(row, (4, 1, d))
+    y, _ = MOE.moe_apply(params, x, top_k=1, capacity_factor=1.0,
+                         mlp_kind="gelu", drop_tokens=True)
+    y = np.asarray(y)
+    assert np.abs(y[0]).sum() > 0
+    assert np.abs(y[3]).sum() == 0, "row 3 should drop under cap=1"
 
 
 @pytest.mark.parametrize("arch", ["qwen2-72b", "gemma3-4b", "mamba2-130m",
