@@ -18,6 +18,10 @@ on/off, PIM + baseline points):
 * ``fleet/serve_replan_*`` — repeated serving-loop telemetry queries
   (fresh planner per query, the replan pattern) with the resolved-lane
   LRU disabled vs enabled.
+* ``fleet/policy_*`` — adaptive offload control closed-loop over a
+  bursty serving trace: per-step recompute vs hysteresis vs sticky on
+  control cost (us/step, planner queries) with the realized/oracle
+  efficiency asserted >= 0.95.
 
 The resolved-lane cache is cleared before every timed resolution section
 so the ``resolve``/``sweep``/``specs`` rows measure real engine work on
@@ -240,6 +244,40 @@ def main(quick: bool = False) -> dict:
     print(f"fleet/serve_replan_speedup,{replan_warm_s*1e3:.1f},"
           f"{replan_cold_s/replan_warm_s:.1f}")
 
+    # Adaptive offload control: each policy closed-loop over the same
+    # bursty serving trace (simulated occupancy, fresh planner per
+    # policy so the plan cost is inside the measurement).  Columns:
+    # us per decode step, planner queries issued.  The efficiency row
+    # asserts the cheap policies stay >= 0.95x of the per-step oracle —
+    # the rows always track a correct control loop, same discipline as
+    # the bit-exactness asserts above.
+    from repro.serving.scenarios import make_scenario, occupancy_trace, \
+        run_policy_over_trace
+    trace = occupancy_trace(make_scenario("bursty", seed=7, quick=quick))
+    policy_reports = {}
+    policy_step_us = {}
+    for pol in ("per-step", "hysteresis", "sticky"):
+        planner_pol = OffloadPlanner(cfg, PimSimulator())
+        t0 = time.perf_counter()
+        controller = run_policy_over_trace(planner_pol, pol, trace)
+        dt = time.perf_counter() - t0
+        rep = controller.report()
+        policy_reports[pol] = rep
+        policy_step_us[pol] = dt * 1e6 / max(rep["steps"], 1)
+        print(f"fleet/policy_{pol},{policy_step_us[pol]:.1f},"
+              f"{rep['planner_queries']}")
+    per_step = policy_reports["per-step"]
+    assert abs(per_step["efficiency"] - 1.0) < 1e-12, \
+        "per-step recompute must be its own oracle"
+    for pol in ("hysteresis", "sticky"):
+        rep = policy_reports[pol]
+        assert rep["efficiency"] >= 0.95, (pol, rep["efficiency"])
+        assert rep["planner_queries"] < per_step["planner_queries"], \
+            (pol, rep["planner_queries"])
+    print(f"fleet/policy_efficiency,"
+          f"{policy_reports['hysteresis']['efficiency']:.4f},"
+          f"{policy_reports['sticky']['efficiency']:.4f}")
+
     return dict(points=n,
                 devices=len(engine.lane_devices()),
                 plan_speedup=plan_ref_s / plan_vec_s,
@@ -247,6 +285,11 @@ def main(quick: bool = False) -> dict:
                 sweep_speedup=sweep_loop_s / sweep_batch_s,
                 specs_speedup=specs_loop_s / specs_batch_s,
                 serve_replan_speedup=replan_cold_s / replan_warm_s,
+                policy_efficiency={p: r["efficiency"]
+                                   for p, r in policy_reports.items()},
+                policy_queries={p: r["planner_queries"]
+                                for p, r in policy_reports.items()},
+                policy_step_us=policy_step_us,
                 plan_batched_s=plan_vec_s,
                 sweep_batched_s=sweep_batch_s,
                 sweep_looped_s=sweep_loop_s)

@@ -16,12 +16,18 @@ from repro.core.pimsim import PimSimulator
 from repro.models import model as M
 from repro.serving.engine import Request, ServingEngine
 from repro.serving.offload import OffloadPlanner
+from repro.serving.policy import OffloadController
 
 full_cfg = ARCHS["granite-8b"]
 cfg = smoke_config(full_cfg)
 params = M.init_params(cfg, jax.random.PRNGKey(0))
 planner = OffloadPlanner(full_cfg, PimSimulator())
-engine = ServingEngine(cfg, params, slots=4, max_seq=96, planner=planner)
+# Adaptive offload control: the hysteresis policy damps decision flips
+# near the crossover batch, so it needs one planner query for the whole
+# run instead of one per decode step.
+controller = OffloadController(planner, policy="hysteresis")
+engine = ServingEngine(cfg, params, slots=4, max_seq=96, planner=planner,
+                       controller=controller)
 
 rng = np.random.default_rng(0)
 requests = [Request(rid=i, prompt=rng.integers(0, cfg.vocab, size=5 + i),
@@ -44,6 +50,13 @@ print(f"  PIM-offloaded       : {tel['mixed_ns']/1e3:9.1f} us   "
       f"-> {tel['speedup']:.2f}x")
 print(f"  offloaded sites: {', '.join(tel['offloaded'][:6])} ... "
       f"({len(tel['offloaded'])}/{tel['n_sites']})")
+
+rep = stats["policy"]
+print(f"\nadaptive offload control ({rep['policy']} policy):")
+print(f"  realized speedup {rep['realized_speedup']:.2f}x vs oracle "
+      f"{rep['oracle_speedup']:.2f}x (efficiency {rep['efficiency']:.3f})")
+print(f"  {rep['switches']} decision switches, "
+      f"{rep['planner_queries']} planner queries over {rep['steps']} steps")
 
 # batch-size sweep: where does PIM stop winning?
 print("\nbatch-size crossover (decode-step speedup from offload):")

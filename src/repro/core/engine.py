@@ -381,7 +381,7 @@ _LANE_CACHE: "OrderedDict[tuple, tuple[int, np.ndarray | None]]" = \
 _LANE_CACHE_LOCK = threading.Lock()
 _LANE_CACHE_MAX = 4096
 _LANE_ISSUE_BYTES = 1 << 16
-_LANE_STATS = {"hits": 0, "misses": 0}
+_LANE_STATS = {"hits": 0, "misses": 0, "evictions": 0}
 
 
 def configure_lane_cache(maxsize: int) -> None:
@@ -390,7 +390,8 @@ def configure_lane_cache(maxsize: int) -> None:
     with _LANE_CACHE_LOCK:
         _LANE_CACHE_MAX = max(0, int(maxsize))
         _LANE_CACHE.clear()
-        _LANE_STATS["hits"] = _LANE_STATS["misses"] = 0
+        for k in _LANE_STATS:
+            _LANE_STATS[k] = 0
 
 
 def lane_cache_clear() -> None:
@@ -400,9 +401,14 @@ def lane_cache_clear() -> None:
 
 
 def lane_cache_info() -> dict:
+    """Lane-LRU counters.  ``misses`` is the fleet-resolve count signal
+    serving policies watch: a replan against a warm cache leaves it
+    untouched, so a growing miss count means real engine work happened
+    (cache cleared, capacity pressure, or genuinely new lanes)."""
     with _LANE_CACHE_LOCK:
         return dict(size=len(_LANE_CACHE), maxsize=_LANE_CACHE_MAX,
-                    hits=_LANE_STATS["hits"], misses=_LANE_STATS["misses"])
+                    hits=_LANE_STATS["hits"], misses=_LANE_STATS["misses"],
+                    evictions=_LANE_STATS["evictions"])
 
 
 def _lane_cache_get(key, need_issue: bool):
@@ -431,6 +437,7 @@ def _lane_cache_put(key, total: int, issue: np.ndarray | None) -> None:
         _LANE_CACHE.move_to_end(key)
         while len(_LANE_CACHE) > _LANE_CACHE_MAX:
             _LANE_CACHE.popitem(last=False)
+            _LANE_STATS["evictions"] += 1
 
 
 # ---------------------------------------------------------------------------

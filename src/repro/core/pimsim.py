@@ -33,6 +33,12 @@ class PimSimulator:
         self.executor = PimExecutor(self.spec)
         self._cache: dict = {}
 
+    def clear_cache(self) -> None:
+        """Drop memoized request results; the next query re-resolves
+        through the engine (offload replans route here via
+        ``OffloadPlanner.invalidate``)."""
+        self._cache.clear()
+
     # ------------------------------------------------------------------
     def run_many(self, reqs: Sequence[GemvRequest]) -> list[PimResult]:
         """Resolve many requests; cache-hit dedupe + one engine batch.

@@ -265,13 +265,18 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
     return rec
 
 
-def pim_offload_report(arch: str, batches=(1, 2, 4, 8, 16)) -> dict:
+def pim_offload_report(arch: str, batches=(1, 2, 4, 8, 16),
+                       scenario: str | None = None,
+                       policy: str = "per-step") -> dict:
     """Decode-phase PIM offload telemetry across a hardware-variant grid.
 
     One ``OffloadPlanner.plan_grid`` call — i.e. a single batched engine
     dispatch — covers every (spec variant x GEMV site) point of this
     model; per variant we record the plan and the end-to-end decode-step
-    speedup curve over batch sizes.  Writes
+    speedup curve over batch sizes.  With ``scenario`` the report also
+    runs the adaptive offload controller closed-loop over that
+    scenario's simulated occupancy trace (no model involved) and records
+    realized-vs-oracle policy telemetry.  Writes
     experiments/dryrun/pim/<arch>.json.
     """
     import dataclasses as _dc
@@ -279,6 +284,8 @@ def pim_offload_report(arch: str, batches=(1, 2, 4, 8, 16)) -> dict:
     from repro.core.timing import DEFAULT_SYSTEM, LpddrTimings, PimSpec, \
         SystemSpec
     from repro.serving.offload import OffloadPlanner
+    from repro.serving.scenarios import make_scenario, occupancy_trace, \
+        run_policy_over_trace
 
     variants = {
         "lp5x-9600": DEFAULT_SYSTEM,
@@ -300,6 +307,12 @@ def pim_offload_report(arch: str, batches=(1, 2, 4, 8, 16)) -> dict:
                                                            spec=spec)
                             for b in batches},
         )
+    if scenario:
+        sc = make_scenario(scenario, seed=0, quick=True)
+        controller = run_policy_over_trace(planner, policy,
+                                           occupancy_trace(sc))
+        rec["serving_policy"] = dict(scenario=scenario, policy=policy,
+                                     report=controller.report())
     out_dir = OUT_DIR / "pim"
     out_dir.mkdir(parents=True, exist_ok=True)
     (out_dir / f"{arch}.json").write_text(json.dumps(rec, indent=1))
@@ -327,6 +340,16 @@ def main() -> None:
                     help="emit decode-phase PIM offload telemetry per arch "
                          "(multi-spec grid, one batched engine query) "
                          "instead of lowering/compiling cells")
+    from repro.serving.policy import POLICIES
+    from repro.serving.scenarios import SCENARIOS
+    ap.add_argument("--scenario", default=None,
+                    choices=sorted(SCENARIOS),
+                    help="with --pim: also run the adaptive offload "
+                         "controller closed-loop over this scenario's "
+                         "simulated occupancy trace")
+    ap.add_argument("--policy", default="per-step",
+                    choices=sorted(POLICIES),
+                    help="with --pim --scenario: offload control policy")
     ap.add_argument("--extrap-only", action="store_true",
                     help="recompute the probe extrapolation of existing "
                          "cells (methodology changes) without the full "
@@ -338,12 +361,21 @@ def main() -> None:
             ap.error(f"--pim needs --all or --arch from {list(ARCHS)}")
         archs = list(ARCHS) if args.all else [args.arch]
         for arch in archs:
-            rec = pim_offload_report(arch)
+            rec = pim_offload_report(arch, scenario=args.scenario,
+                                     policy=args.policy)
             base = rec["variants"]["lp5x-9600"]["decode_speedup"]["1"]
             print(f"[pim] {arch}: decode b=1 speedup "
                   f"{base['speedup']:.2f}x, "
                   f"{len(base['offloaded'])}/{base['n_sites']} sites",
                   flush=True)
+            if "serving_policy" in rec:
+                rep = rec["serving_policy"]["report"]
+                print(f"[pim] {arch}: {args.scenario} x {args.policy}: "
+                      f"realized {rep['realized_speedup']:.2f}x / oracle "
+                      f"{rep['oracle_speedup']:.2f}x (eff "
+                      f"{rep['efficiency']:.3f}), "
+                      f"{rep['planner_queries']} queries over "
+                      f"{rep['steps']} steps", flush=True)
         sys.exit(0)
 
     meshes = {"pod1": [False], "pod2": [True],

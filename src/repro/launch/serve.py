@@ -4,6 +4,12 @@ The paper's kind is inference (LP5X-PIM accelerates decode GEMV), so this
 is the primary end-to-end driver: it serves a model with batched
 requests and reports, per decode step, what the LP5X-PIM offload would
 deliver on the reference LPDDR5X-9600 x 4ch memory system.
+
+With ``--scenario`` the launcher becomes the closed-loop policy testbed:
+a seeded workload (steady / bursty / diurnal / prefill-heavy /
+drain-refill) drives the engine end to end under an adaptive offload
+controller (``--policy per-step|hysteresis|sticky``) and the run reports
+realized vs oracle speedup, decision switches and planner queries.
 """
 from __future__ import annotations
 
@@ -18,6 +24,31 @@ from repro.core.pimsim import PimSimulator
 from repro.models import model as M
 from repro.serving.engine import Request, ServingEngine
 from repro.serving.offload import OffloadPlanner
+from repro.serving.policy import POLICIES
+from repro.serving.scenarios import SCENARIOS, make_scenario, run_scenario
+
+
+def run_scenario_mode(args, full_cfg, cfg, params) -> None:
+    planner = OffloadPlanner(full_cfg, PimSimulator())
+    spec = make_scenario(args.scenario, seed=args.seed, slots=args.slots,
+                         quick=args.quick)
+    t0 = time.perf_counter()
+    trace = run_scenario(spec, cfg, params, planner, policy=args.policy,
+                         fence=args.fence)
+    dt = time.perf_counter() - t0
+    rep = trace["controller"]
+    print(f"scenario {args.scenario} (seed={args.seed}, "
+          f"{len(spec.arrivals)} requests, {args.slots} slots) under "
+          f"policy {args.policy}: {trace['tokens']} tokens in "
+          f"{trace['steps']} steps ({dt:.2f}s host wall)")
+    occ = ", ".join(f"{b}:{c}" for b, c in trace["occupancy"].items())
+    print(f"  batch occupancy      : {occ}")
+    print(f"  realized speedup     : {rep['realized_speedup']:.3f}x "
+          f"(oracle {rep['oracle_speedup']:.3f}x, "
+          f"efficiency {rep['efficiency']:.3f})")
+    print(f"  decision switches    : {rep['switches']}; planner queries "
+          f"{rep['planner_queries']}/{rep['steps']} steps; "
+          f"replans {rep['replans']}")
 
 
 def main() -> None:
@@ -28,6 +59,15 @@ def main() -> None:
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=8)
     ap.add_argument("--fence", action="store_true", default=True)
+    ap.add_argument("--scenario", choices=sorted(SCENARIOS), default=None,
+                    help="drive a seeded workload scenario end to end "
+                         "under an adaptive offload controller")
+    ap.add_argument("--policy", choices=sorted(POLICIES),
+                    default="per-step",
+                    help="offload control policy for --scenario runs")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller scenario (CI smoke)")
     args = ap.parse_args()
 
     full_cfg = ARCHS[args.arch]
@@ -36,6 +76,10 @@ def main() -> None:
         raise SystemExit(f"{cfg.name} serves stub embeddings; "
                          "see launch/dryrun.py for its decode cells")
     params = M.init_params(cfg, jax.random.PRNGKey(0))
+
+    if args.scenario:
+        run_scenario_mode(args, full_cfg, cfg, params)
+        return
 
     # Offload plan computed against the FULL architecture (the simulator
     # works on real matrix sizes regardless of the smoke model we run).

@@ -22,6 +22,7 @@ import numpy as np
 from repro.configs.base import ArchConfig
 from repro.models import model as M
 from .offload import OffloadPlanner
+from .policy import OffloadController
 
 
 @dataclasses.dataclass
@@ -37,7 +38,8 @@ class Request:
 class ServingEngine:
     def __init__(self, cfg: ArchConfig, params, slots: int = 4,
                  max_seq: int = 256, planner: Optional[OffloadPlanner]
-                 = None, step_telemetry: bool = False):
+                 = None, step_telemetry: bool = False,
+                 controller: Optional[OffloadController] = None):
         assert cfg.input_mode == "tokens", "engine serves token models"
         self.cfg, self.params = cfg, params
         self.slots = slots
@@ -46,9 +48,18 @@ class ServingEngine:
         self.active: list[Optional[Request]] = [None] * slots
         self.pos = np.zeros(slots, dtype=np.int32)
         self.waiting: list[Request] = []
+        # Adaptive offload control: the controller sees every decode
+        # step's live batch size and runs its policy (per-step
+        # recompute, hysteresis, sticky — serving/policy.py); its
+        # planner doubles as the telemetry planner unless one was
+        # passed explicitly.
+        self.controller = controller
+        if planner is None and controller is not None:
+            planner = controller.planner
         self.planner = planner
         self.stats = dict(steps=0, tokens=0, prefills=0)
         self.batch_occupancy: dict[int, int] = {}
+        self.step_batches: list[int] = []      # trace: batch per step
         # Per-step PIM telemetry: one planner query per decode step at
         # the step's true occupancy.  The first query per batch size does
         # the (lane-cache-accelerated) fleet resolve; repeats are pure
@@ -116,6 +127,9 @@ class ServingEngine:
                     or self.pos[i] >= self.max_seq - 1):
                 req.done = True
                 self.active[i] = None
+        self.step_batches.append(len(act))
+        if self.controller is not None:
+            self.controller.observe(len(act))
         if self.planner is not None and self.step_telemetry:
             tel = self.planner.decode_speedup(batch=len(act))
             self.step_speedups.append(dict(step=self.stats["steps"],
@@ -128,6 +142,15 @@ class ServingEngine:
         while (any(self.active) or self.waiting) and max_steps > 0:
             self.step()
             max_steps -= 1
+        return self.summary()
+
+    def summary(self) -> dict:
+        """Run stats + PIM telemetry (+ policy report when controlled).
+
+        Split out of :meth:`run` so trace-driven drivers — scenario
+        loops that interleave arrivals with steps — get the identical
+        record without going through ``run``'s step loop.
+        """
         out = dict(self.stats)
         out["batch_occupancy"] = dict(self.batch_occupancy)
         if self.planner is not None:
@@ -148,4 +171,6 @@ class ServingEngine:
             if self.step_speedups:
                 tel["per_step"] = list(self.step_speedups)
             out["pim_telemetry"] = tel
+        if self.controller is not None:
+            out["policy"] = self.controller.report()
         return out

@@ -81,6 +81,40 @@ class OffloadDecision:
         host = max(self.host_ns, 1e-9)   # host amortizes weight reads
         return host / pim
 
+    def offload_at(self, batch: int) -> bool:
+        """Exact per-step predicate: PIM wins this site at this batch.
+
+        The float comparison, not the truncated ``offload_below_batch``
+        integer, so every consumer (planner telemetry, controller
+        policies, property tests) agrees at the boundary.
+        """
+        return self.pim_ns * batch < self.host_ns
+
+
+def offload_set(decisions: Sequence[OffloadDecision],
+                batch: int) -> frozenset:
+    """Site names PIM wins at this batch — the per-step oracle set."""
+    return frozenset(d.site.name for d in decisions if d.offload_at(batch))
+
+
+def step_cost(decisions: Sequence[OffloadDecision], batch: int,
+              offload: frozenset) -> tuple[float, float]:
+    """(host_ns, mixed_ns) of one decode step at ``batch`` with the
+    sites in ``offload`` on PIM and everything else on the host.  This
+    is the decision API the adaptive controller shares with
+    ``decode_speedup`` — any offload set can be costed, not just the
+    oracle one, which is how realized-vs-oracle telemetry is computed.
+    """
+    host_total = mixed_total = 0.0
+    for d in decisions:
+        host = d.host_ns * d.site.count
+        host_total += host
+        if d.site.name in offload:
+            mixed_total += d.pim_ns * batch * d.site.count
+        else:
+            mixed_total += host
+    return host_total, mixed_total
+
 
 class OffloadPlanner:
     def __init__(self, cfg: ArchConfig, sim: PimSimulator | None = None,
@@ -130,27 +164,28 @@ class OffloadPlanner:
         """Offload decision per GEMV site (one spec of the grid path)."""
         return self.plan_grid([spec or self.sim.spec], fence=fence)[0]
 
+    def invalidate(self) -> None:
+        """Forget cached plans and batched simulator results so the next
+        ``plan`` re-derives every offload decision through the engine.
+        With a warm resolved-lane LRU that replan costs dict lookups,
+        not fleet work — the property sticky-policy refreshes rely on.
+        """
+        self._plans.clear()
+        self.sim.clear_cache()
+
     def decode_speedup(self, batch: int = 1, fence: bool = True,
                        spec: SystemSpec | None = None) -> dict:
         """End-to-end decode-step speedup from offloading (Amdahl over
         all GEMV sites; cached weights on host amortize over batch)."""
         decisions = self.plan(fence=fence, spec=spec)
-        host_total = sum(d.host_ns * d.site.count for d in decisions)
-        mixed_total = 0.0
-        offloaded = []
-        for d in decisions:
-            pim = d.pim_ns * batch * d.site.count
-            host = d.host_ns * d.site.count
-            if pim < host:
-                mixed_total += pim
-                offloaded.append(d.site.name)
-            else:
-                mixed_total += host
+        off = offload_set(decisions, batch)
+        host_total, mixed_total = step_cost(decisions, batch, off)
         return dict(batch=batch,
                     host_ns=host_total,
                     mixed_ns=mixed_total,
                     speedup=host_total / max(mixed_total, 1e-9),
-                    offloaded=offloaded,
+                    offloaded=[d.site.name for d in decisions
+                               if d.site.name in off],
                     n_sites=len(decisions))
 
     def occupancy_weighted_speedup(self, occupancy: dict[int, int],
@@ -165,7 +200,15 @@ class OffloadPlanner:
         the histogram.  After the first ``plan`` (one batched, lane-
         cache-accelerated fleet query) this is pure arithmetic over the
         cached decisions, so it is cheap enough to recompute every run.
+
+        An empty histogram means "no decode steps observed": the neutral
+        answer is speedup 1.0 over zero steps, not the 0/eps collapse a
+        missing-trace caller would otherwise read as "PIM is infinitely
+        bad".
         """
+        if not occupancy:
+            return dict(steps=0, host_ns=0.0, mixed_ns=0.0, speedup=1.0,
+                        per_batch_speedup={})
         host_total = mixed_total = 0.0
         per_batch = {}
         steps = 0

@@ -1,0 +1,281 @@
+"""Trace-driven serving scenarios: seeded workloads + replayable traces.
+
+A scenario is a deterministic arrival schedule — request id, arrival
+tick, prompt length, decode budget — produced by a seeded generator.
+Five load shapes cover the serving regimes the offload policies must
+survive:
+
+* ``steady``        — one request every few ticks, stable occupancy.
+* ``bursty``        — Poisson arrivals whose rate spikes in short burst
+                      windows (the queue oscillates across the offload
+                      crossover batch).
+* ``diurnal``       — sinusoidal arrival rate, a slow ramp up and down.
+* ``prefill-heavy`` — few requests, long prompts, short decode budgets.
+* ``drain-refill``  — waves separated by idle gaps (occupancy collapses
+                      to zero and refills from empty).
+
+``simulate_batches`` mirrors :class:`ServingEngine`'s admission and
+completion semantics exactly (requests finish on their decode budget,
+never on EOS), so a scenario's per-tick occupancy trace is available
+*without* running a model — that is what the policy benchmarks, the
+dry-run closed loop and the property tests drive.  ``run_scenario``
+drives the real engine end to end (model decode included) and emits a
+replayable trace record; one bursty trace is pinned byte-exactly in
+``tests/golden/serve_trace.json``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Sequence
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class Arrival:
+    """One request of a scenario schedule (all scheduling, no tokens)."""
+
+    rid: int
+    step: int          # driver tick at which the request is submitted
+    prompt_len: int
+    max_new: int
+
+    def decode_steps(self) -> int:
+        # Prefill emits the first token; the engine marks a request done
+        # after the decode step that reaches max_new, so a request holds
+        # its slot for max(1, max_new - 1) decode steps.
+        return max(1, self.max_new - 1)
+
+
+@dataclasses.dataclass(frozen=True)
+class ScenarioSpec:
+    name: str
+    seed: int
+    slots: int
+    arrivals: tuple
+
+    def to_record(self) -> dict:
+        return dict(name=self.name, seed=self.seed, slots=self.slots,
+                    arrivals=[dataclasses.asdict(a) for a in self.arrivals])
+
+    @staticmethod
+    def from_record(rec: dict) -> "ScenarioSpec":
+        return ScenarioSpec(
+            name=rec["name"], seed=rec["seed"], slots=rec["slots"],
+            arrivals=tuple(Arrival(**a) for a in rec["arrivals"]))
+
+
+def _pack(name: str, seed: int, slots: int, raw) -> ScenarioSpec:
+    """Sort (step, order) and assign dense rids — determinism lives here."""
+    arrivals = tuple(Arrival(rid=i, step=int(s), prompt_len=int(p),
+                             max_new=int(m))
+                     for i, (s, p, m) in enumerate(raw))
+    return ScenarioSpec(name=name, seed=seed, slots=slots,
+                        arrivals=arrivals)
+
+
+def _steady(rng, slots: int, quick: bool):
+    n = 8 if quick else 24
+    gap = 2
+    return [(i * gap, rng.integers(4, 12), rng.integers(4, 8))
+            for i in range(n)]
+
+
+def _bursty(rng, slots: int, quick: bool):
+    horizon = 40 if quick else 120
+    n_bursts = 2 if quick else 5
+    burst_at = sorted(rng.choice(horizon - 6, size=n_bursts,
+                                 replace=False))
+    raw = []
+    for t in range(horizon):
+        lam = 0.12
+        for b in burst_at:
+            if b <= t < b + 3:
+                lam = 1.6
+        for _ in range(rng.poisson(lam)):
+            raw.append((t, rng.integers(4, 12), rng.integers(3, 9)))
+    return raw
+
+
+def _diurnal(rng, slots: int, quick: bool):
+    horizon = 48 if quick else 144
+    period = horizon / 2
+    raw = []
+    for t in range(horizon):
+        lam = 0.55 * (1.0 + math.sin(2.0 * math.pi * t / period))
+        for _ in range(rng.poisson(lam)):
+            raw.append((t, rng.integers(4, 12), rng.integers(3, 8)))
+    return raw
+
+
+def _prefill_heavy(rng, slots: int, quick: bool):
+    n = 6 if quick else 16
+    gap = 3
+    return [(i * gap, rng.integers(24, 48), rng.integers(2, 5))
+            for i in range(n)]
+
+
+def _drain_refill(rng, slots: int, quick: bool):
+    waves = 2 if quick else 4
+    wave_size = slots + 2
+    max_new_hi = 7
+    # A wave of wave_size requests over `slots` drains in at most
+    # ceil(wave_size / slots) * (max_new_hi - 1) decode ticks; the gap
+    # guarantees an idle stretch between waves.
+    wave_gap = -(-wave_size // slots) * (max_new_hi - 1) + 6
+    raw = []
+    for w in range(waves):
+        for _ in range(wave_size):
+            raw.append((w * wave_gap, rng.integers(4, 12),
+                        rng.integers(3, max_new_hi)))
+    return raw
+
+
+SCENARIOS = {
+    "steady": _steady,
+    "bursty": _bursty,
+    "diurnal": _diurnal,
+    "prefill-heavy": _prefill_heavy,
+    "drain-refill": _drain_refill,
+}
+
+
+def make_scenario(name: str, seed: int = 0, slots: int = 8,
+                  quick: bool = False) -> ScenarioSpec:
+    """Build a deterministic scenario: same (name, seed, slots, quick)
+    always yields the identical arrival schedule."""
+    if name not in SCENARIOS:
+        raise ValueError(f"unknown scenario {name!r}; "
+                         f"choose from {sorted(SCENARIOS)}")
+    rng = np.random.default_rng(seed)
+    return _pack(name, seed, slots, SCENARIOS[name](rng, slots, quick))
+
+
+# ---------------------------------------------------------------------
+# Pure occupancy simulation (ServingEngine's scheduling semantics)
+# ---------------------------------------------------------------------
+
+def simulate_batches(spec: ScenarioSpec, max_ticks: int = 100_000
+                     ) -> list[int]:
+    """Per-tick decode batch sizes of an engine driving this scenario.
+
+    0 entries are idle ticks (all slots free, later arrivals pending) —
+    the drain/refill gaps.  This mirrors ``ServingEngine`` exactly:
+    admission at the start of a tick in arrival order, one decode step
+    per tick per active slot, completion after ``decode_steps`` ticks
+    (EOS never fires in scenario runs); the conformance test drives the
+    real engine and asserts tick-for-tick equality.
+    """
+    pending = sorted(spec.arrivals, key=lambda a: (a.step, a.rid))
+    i = 0
+    waiting: list[Arrival] = []
+    active = [0] * spec.slots
+    batches: list[int] = []
+    t = 0
+    while i < len(pending) or waiting or any(active):
+        while i < len(pending) and pending[i].step <= t:
+            waiting.append(pending[i])
+            i += 1
+        for s in range(spec.slots):
+            if active[s] == 0 and waiting:
+                active[s] = waiting.pop(0).decode_steps()
+        batches.append(sum(1 for rem in active if rem > 0))
+        for s in range(spec.slots):
+            if active[s] > 0:
+                active[s] -= 1
+        t += 1
+        if t > max_ticks:
+            raise RuntimeError(f"scenario {spec.name} did not drain "
+                               f"within {max_ticks} ticks")
+    return batches
+
+
+def occupancy_trace(spec: ScenarioSpec) -> list[int]:
+    """The non-idle batch sequence — what an offload policy observes."""
+    return [b for b in simulate_batches(spec) if b > 0]
+
+
+def run_policy_over_trace(planner, policy, batches: Sequence[int],
+                          fence: bool = True, spec=None,
+                          policy_kw: dict | None = None):
+    """Drive a controller over a recorded occupancy trace (no model).
+
+    The closed loop the dry-run and the ``fleet/policy_*`` benchmark
+    rows run: every non-idle batch size is shown to the policy once, in
+    order.  Returns the controller (``.report()`` has the verdict).
+    """
+    from .policy import OffloadController
+    controller = OffloadController(planner, policy=policy, fence=fence,
+                                   spec=spec, **(policy_kw or {}))
+    for b in batches:
+        if b > 0:
+            controller.observe(int(b))
+    return controller
+
+
+# ---------------------------------------------------------------------
+# End-to-end: drive the real ServingEngine and emit a replayable trace
+# ---------------------------------------------------------------------
+
+def run_scenario(scenario: ScenarioSpec, cfg, params, planner,
+                 policy: str = "per-step", fence: bool = True,
+                 max_seq: int | None = None,
+                 policy_kw: dict | None = None) -> dict:
+    """Serve the scenario end to end (real model decode) under an
+    adaptive offload controller; return the replayable trace record.
+
+    The trace carries only platform-independent telemetry — scheduling,
+    occupancy, offload decisions and planner-derived speedups (pure
+    arithmetic over bit-exact engine cycle counts) — never model token
+    values, so it can be pinned byte-exactly as a golden fixture.
+    """
+    from .engine import Request, ServingEngine
+    from .policy import OffloadController
+
+    controller = OffloadController(planner, policy=policy, fence=fence,
+                                   **(policy_kw or {}))
+    if max_seq is None:
+        max_seq = max(a.prompt_len + a.max_new for a in scenario.arrivals)
+        max_seq = max(64, 2 * max_seq)
+    eng = ServingEngine(cfg, params, slots=scenario.slots, max_seq=max_seq,
+                        controller=controller)
+    rng = np.random.default_rng(scenario.seed + 1)   # token values only
+    pending = sorted(scenario.arrivals, key=lambda a: (a.step, a.rid))
+    reqs = {a.rid: Request(rid=a.rid,
+                           prompt=rng.integers(0, cfg.vocab,
+                                               size=a.prompt_len),
+                           max_new=a.max_new)
+            for a in pending}
+    i = 0
+    t = 0
+    per_tick: list[int] = []
+    while i < len(pending) or any(eng.active) or eng.waiting:
+        while i < len(pending) and pending[i].step <= t:
+            eng.submit(reqs[pending[i].rid])
+            i += 1
+        stepped = eng.step()
+        per_tick.append(eng.step_batches[-1] if stepped else 0)
+        t += 1
+        if t > 100_000:
+            raise RuntimeError("scenario did not drain")
+    stats = eng.summary()
+    assert all(r.done for r in reqs.values())
+    return dict(
+        scenario=scenario.to_record(),
+        policy=controller.policy.name,
+        fence=fence,
+        per_tick_batch=per_tick,
+        occupancy={str(k): v for k, v in
+                   sorted(stats["batch_occupancy"].items())},
+        steps=stats["steps"], tokens=stats["tokens"],
+        prefills=stats["prefills"],
+        controller=controller.report(),
+        per_step=[r.to_record() for r in controller.trace],
+    )
+
+
+def replay_batches(trace: dict) -> list[int]:
+    """Re-derive the per-tick occupancy of a recorded trace from its
+    embedded schedule alone (no model, no planner) — the replay hook."""
+    return simulate_batches(ScenarioSpec.from_record(trace["scenario"]))

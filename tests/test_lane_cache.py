@@ -1,0 +1,105 @@
+"""Resolved-lane LRU regression tests, serving-replan flavored.
+
+The lane cache is what makes adaptive replanning affordable (PR 3:
+~50-60x on serve replans), and its counters are now a *policy input* —
+the sticky policy treats a growing miss count as "the memoized timing
+world went cold" and re-plans.  These tests pin the counter semantics
+across repeated planner replans, the disabled (capacity 0) path, the
+eviction counter, and the headline property: a sticky-policy replan
+against a warm cache does ZERO fleet resolves.
+"""
+import pytest
+
+from repro.configs import ARCHS
+from repro.core import engine
+from repro.core.pimsim import PimSimulator
+from repro.serving.offload import OffloadPlanner
+from repro.serving.policy import OffloadController
+from repro.serving.scenarios import make_scenario, occupancy_trace
+
+ARCH = "mamba2-130m"
+
+
+@pytest.fixture(autouse=True)
+def fresh_lane_cache():
+    engine.configure_lane_cache(4096)
+    yield
+    engine.configure_lane_cache(4096)
+
+
+def fresh_planner() -> OffloadPlanner:
+    return OffloadPlanner(ARCHS[ARCH], PimSimulator())
+
+
+def test_replan_hit_miss_counters():
+    """First plan misses (cold lanes), every replan after it only hits."""
+    planner = fresh_planner()
+    planner.plan()
+    info = engine.lane_cache_info()
+    assert info["misses"] > 0 and info["size"] > 0
+    for _ in range(3):
+        planner.invalidate()
+        planner.plan()
+    info2 = engine.lane_cache_info()
+    assert info2["misses"] == info["misses"], "warm replan missed"
+    assert info2["hits"] > info["hits"]
+    assert info2["evictions"] == 0
+
+
+def test_disabled_lane_cache_counts_nothing_and_agrees():
+    planner = fresh_planner()
+    warm = {d.site.name: (d.pim_ns, d.host_ns) for d in planner.plan()}
+    engine.configure_lane_cache(0)
+    planner = fresh_planner()
+    cold = {d.site.name: (d.pim_ns, d.host_ns) for d in planner.plan()}
+    info = engine.lane_cache_info()
+    assert info == dict(size=0, maxsize=0, hits=0, misses=0, evictions=0)
+    assert cold == warm, "lane cache must not change telemetry"
+
+
+def test_eviction_counter_under_capacity_pressure():
+    engine.configure_lane_cache(2)
+    fresh_planner().plan()      # far more unique lanes than 2 entries
+    info = engine.lane_cache_info()
+    assert info["evictions"] > 0
+    assert info["size"] <= 2
+
+
+def test_sticky_replans_do_zero_fleet_resolves_when_warm():
+    """The acceptance property: a sticky refresh-replan re-derives the
+    whole plan through the simulator, and with a warm lane cache that
+    costs dict lookups — the miss counter does not move."""
+    planner = fresh_planner()
+    controller = OffloadController(planner, policy="sticky")
+    trace = occupancy_trace(make_scenario("drain-refill", seed=0))
+    controller.observe(trace[0])            # first plan warms the lanes
+    warm = engine.lane_cache_info()
+    for b in trace[1:]:
+        controller.observe(b)
+    assert controller.replans >= 1, "drain-refill must trigger replans"
+    for b in (1, 4, 8):                     # forced full refresh replans
+        controller.replan(b, refresh=True)
+    info = engine.lane_cache_info()
+    assert info["misses"] == warm["misses"], \
+        "sticky replan did fleet resolves against a warm cache"
+    assert info["hits"] > warm["hits"]
+
+
+def test_sticky_cold_lane_cache_triggers_refresh_replan():
+    """A lane-cache miss between steps (someone resolved fresh lanes —
+    the memo went cold) makes the sticky policy re-plan through the
+    planner on the next observation."""
+    planner = fresh_planner()
+    controller = OffloadController(planner, policy="sticky")
+    controller.observe(2)
+    controller.observe(2)
+    assert controller.replans == 0
+    # an unrelated fresh resolve bumps the global miss counter
+    PimSimulator().gemv(48, 320, "W8A8")
+    assert engine.lane_cache_info()["misses"] > 0
+    controller.observe(2)
+    assert controller.replans == 1
+    # the refresh started a new epoch rebased on the current miss
+    # count, so a stable cache does not re-trigger
+    controller.observe(2)
+    assert controller.replans == 1

@@ -90,6 +90,15 @@ def test_offload_planner_small_batch_wins():
     assert r64["speedup"] <= r1["speedup"]
 
 
+def test_occupancy_weighted_speedup_empty_histogram():
+    """No decode steps observed -> neutral speedup 1.0 over 0 steps (the
+    old 0/1e-9 guard collapsed to 0.0, reading as 'PIM infinitely bad')."""
+    planner = OffloadPlanner(ARCHS["mamba2-130m"])
+    tel = planner.occupancy_weighted_speedup({})
+    assert tel == dict(steps=0, host_ns=0.0, mixed_ns=0.0, speedup=1.0,
+                       per_batch_speedup={})
+
+
 def test_offload_reshape_regime_for_moe():
     """granite-moe per-expert d_ff=512 < 2048 -> reshape engaged."""
     planner = OffloadPlanner(ARCHS["granite-moe-3b-a800m"])

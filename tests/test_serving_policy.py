@@ -1,0 +1,249 @@
+"""Adaptive offload controller + policy tests (planner-stub level).
+
+The controller only needs a planner that yields ``OffloadDecision``s, so
+everything here runs against a stub — no engine, no model — which is
+what lets the hysteresis state machine be *fuzzed*: random site
+crossovers, random occupancy traces, random (k, band) knobs, with the
+policy's contract checked exhaustively per trace:
+
+* per-site flips never exceed the trace's crossings of that site's
+  threshold;
+* flips committed inside the hysteresis band are further bounded by the
+  K-consecutive-step rule (disjoint streak windows);
+* every step outside the band decides identically to per-step
+  recompute, and ``band=1.0`` collapses the whole policy to per-step.
+
+When hypothesis is unavailable the fuzz test falls back to a
+deterministic seeded corpus (CI runs both flavors), matching
+``tests/test_conformance.py`` conventions.
+"""
+import pytest
+
+try:
+    from hypothesis import HealthCheck, given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:        # collection must never hard-fail
+    HAVE_HYPOTHESIS = False
+
+import numpy as np
+
+from repro.serving.offload import (GemvSite, OffloadDecision, offload_set,
+                                   step_cost)
+from repro.serving.policy import (HysteresisPolicy, OffloadController,
+                                  POLICIES, StickyPolicy, make_policy)
+
+
+class StubPlanner:
+    """The minimal planner surface the controller depends on."""
+
+    def __init__(self, decisions):
+        self._decisions = list(decisions)
+        self.plans = 0
+        self.invalidations = 0
+
+    def plan(self, fence=True, spec=None):
+        self.plans += 1
+        return list(self._decisions)
+
+    def invalidate(self):
+        self.invalidations += 1
+
+
+def make_decisions(crossovers, counts=None):
+    """One site per crossover batch; pim_ns fixed, host_ns = pim * b*."""
+    decisions = []
+    for i, c in enumerate(crossovers):
+        pim = 100.0
+        site = GemvSite(name=f"s{i}", h=1024, w=1024,
+                        count=(counts or [1] * len(crossovers))[i])
+        decisions.append(OffloadDecision(
+            site=site, pim_ns=pim, host_ns=pim * c, reshape=False,
+            offload_below_batch=max(1, int(c))))
+    return decisions
+
+
+def drive(decisions, batches, policy, **kw):
+    controller = OffloadController(StubPlanner(decisions), policy=policy,
+                                   **kw)
+    for b in batches:
+        controller.observe(int(b))
+    return controller
+
+
+# ---------------------------------------------------------------------
+# Fuzzed hysteresis contract (shared by hypothesis and the corpus)
+# ---------------------------------------------------------------------
+
+def check_hysteresis_properties(crossovers, batches, k, band):
+    decisions = make_decisions(crossovers)
+    pol = HysteresisPolicy(k=k, band=band)
+    controller = drive(decisions, batches, pol)
+    T = len(batches)
+    assert len(controller.set_log) == T
+
+    flips: dict[str, list[int]] = {d.site.name: [] for d in decisions}
+    for entry in controller.switch_log:
+        for name in entry["on"] + entry["off"]:
+            flips[name].append(entry["step"])
+
+    for d in decisions:
+        name = d.site.name
+        desired = [d.offload_at(b) for b in batches]
+        crossings = sum(1 for a, b in zip(desired, desired[1:]) if a != b)
+        # (a) flips bounded by threshold crossings of the trace
+        assert len(flips[name]) <= crossings, (name, flips, batches)
+        # (b) in-band flips bounded by the disjoint K-window rule
+        in_band_flips = [t for t in flips[name] if pol.in_band(
+            d, batches[t])]
+        assert len(in_band_flips) <= max(0, T - 1) // k, \
+            (name, in_band_flips, batches)
+        # (c) out-of-band steps decide exactly like per-step recompute
+        for t, b in enumerate(batches):
+            if not pol.in_band(d, b):
+                assert (name in controller.set_log[t]) == desired[t], \
+                    (name, t, b, batches)
+
+    # switches are set-level changes; each needs at least one site flip
+    assert controller.switches == len(controller.switch_log)
+    assert controller.planner_queries == 1     # one startup derivation
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=60, deadline=None,
+              suppress_health_check=[HealthCheck.too_slow])
+    @given(
+        crossovers=st.lists(
+            st.integers(5, 100).map(lambda x: x / 10.0),
+            min_size=1, max_size=6),
+        batches=st.lists(st.integers(1, 12), min_size=1, max_size=80),
+        k=st.integers(1, 5),
+        band=st.sampled_from([1.0, 1.25, 1.5, 2.0]))
+    def test_fuzzed_hysteresis_properties(crossovers, batches, k, band):
+        check_hysteresis_properties(crossovers, batches, k, band)
+else:                      # deterministic fallback when hypothesis absent
+    @pytest.mark.parametrize("seed", range(12))
+    def test_fuzzed_hysteresis_properties(seed):
+        rng = np.random.default_rng(seed)
+        crossovers = [float(x) / 10.0
+                      for x in rng.integers(5, 101, rng.integers(1, 7))]
+        batches = [int(b) for b in
+                   rng.integers(1, 13, rng.integers(1, 81))]
+        k = int(rng.integers(1, 6))
+        band = float(rng.choice([1.0, 1.25, 1.5, 2.0]))
+        check_hysteresis_properties(crossovers, batches, k, band)
+
+
+def test_hysteresis_band_one_is_per_step():
+    """band=1.0 empties the band: every step is 'outside' and the policy
+    degenerates to per-step recompute, set for set."""
+    decisions = make_decisions([1.8, 3.4, 6.2])
+    batches = [1, 2, 5, 7, 2, 1, 8, 3, 3, 4, 6, 1]
+    hyst = drive(decisions, batches, "hysteresis", k=4, band=1.0)
+    per = drive(decisions, batches, "per-step")
+    assert hyst.set_log == per.set_log
+    assert hyst.report()["efficiency"] == 1.0
+
+
+def test_hysteresis_converges_after_k_stable_steps():
+    """Pure streak mode (huge band): after k same-side steps the state
+    matches the oracle, however it oscillated before."""
+    decisions = make_decisions([4.0])
+    batches = [1, 8, 1, 8, 1, 8, 8, 8, 8]
+    controller = drive(decisions, batches, "hysteresis", k=3, band=1e9)
+    assert "s0" not in controller.set_log[-1]   # settled on host side
+    oracle = offload_set(decisions, batches[-1])
+    assert controller.set_log[-1] == oracle
+
+
+def test_per_step_policy_is_oracle():
+    decisions = make_decisions([1.5, 3.0, 5.5], counts=[2, 4, 1])
+    batches = [1, 3, 6, 2, 8, 4, 1]
+    controller = drive(decisions, batches, "per-step")
+    rep = controller.report()
+    assert rep["efficiency"] == 1.0
+    assert rep["realized_speedup"] == rep["oracle_speedup"]
+    assert rep["planner_queries"] == len(batches)
+    for t, b in enumerate(batches):
+        assert controller.set_log[t] == offload_set(decisions, b)
+
+
+def test_sticky_replans_on_mean_drift():
+    decisions = make_decisions([3.5])
+    batches = [2] * 6 + [5] * 8        # slow shift past the crossover
+    controller = drive(decisions, batches, "sticky",
+                       jump=100.0, drift=0.75, min_epoch=3,
+                       watch_lane_cache=False)
+    rep = controller.report()
+    assert rep["replans"] >= 1
+    assert "s0" in controller.set_log[0]        # PIM wins at batch 2
+    assert "s0" not in controller.set_log[-1]   # host wins at batch 5
+    assert rep["planner_queries"] < rep["steps"]
+
+
+def test_sticky_replans_on_jump():
+    decisions = make_decisions([3.5])
+    batches = [2, 2, 2, 8, 8, 8]
+    controller = drive(decisions, batches, "sticky",
+                       jump=2.0, drift=100.0, watch_lane_cache=False)
+    assert controller.report()["replans"] == 1
+    assert controller.set_log[3] == offload_set(decisions, 8)
+
+
+def test_sticky_without_triggers_never_replans():
+    decisions = make_decisions([3.5])
+    controller = drive(decisions, [2, 3, 2, 3, 2, 3], "sticky",
+                       jump=100.0, drift=100.0, watch_lane_cache=False)
+    rep = controller.report()
+    assert rep["replans"] == 0 and rep["planner_queries"] == 1
+
+
+def test_controller_switch_log_names_flipped_sites():
+    decisions = make_decisions([2.5, 6.0])
+    controller = drive(decisions, [1, 8, 8, 8, 8], "hysteresis",
+                       k=2, band=1.0)
+    assert controller.switches == 1
+    entry = controller.switch_log[0]
+    assert entry["step"] == 1 and entry["batch"] == 8
+    assert entry["off"] == ["s0", "s1"] and entry["on"] == []
+
+
+def test_empty_controller_report_is_neutral():
+    controller = OffloadController(StubPlanner(make_decisions([2.0])))
+    rep = controller.report()
+    assert rep["steps"] == 0
+    assert rep["realized_speedup"] == rep["oracle_speedup"] == 1.0
+    assert rep["efficiency"] == 1.0
+
+
+def test_policy_factory_validation():
+    assert set(POLICIES) == {"per-step", "hysteresis", "sticky"}
+    with pytest.raises(ValueError, match="unknown offload policy"):
+        make_policy("nope")
+    with pytest.raises(ValueError):
+        HysteresisPolicy(k=0)
+    with pytest.raises(ValueError):
+        HysteresisPolicy(band=0.5)
+    assert isinstance(make_policy("sticky", drift=2.0), StickyPolicy)
+
+
+def test_step_cost_and_offload_set_agree():
+    """The shared decision API: the oracle set minimizes step_cost, and
+    costing the empty set reproduces the host-only total."""
+    decisions = make_decisions([1.2, 3.7, 8.0], counts=[3, 1, 2])
+    for batch in (1, 2, 4, 7, 11):
+        oracle = offload_set(decisions, batch)
+        host, best = step_cost(decisions, batch, oracle)
+        assert host == step_cost(decisions, batch, frozenset())[1]
+        for other in (frozenset(), frozenset(d.site.name
+                                             for d in decisions)):
+            assert best <= step_cost(decisions, batch, other)[1] + 1e-12
+
+
+def test_controller_replan_refresh_invalidates_planner():
+    stub = StubPlanner(make_decisions([3.0]))
+    controller = OffloadController(stub, policy="per-step")
+    controller.observe(2)
+    assert stub.plans == 1
+    controller.replan(2, refresh=True)
+    assert stub.invalidations == 1 and stub.plans == 2
+    assert controller.replans == 1
