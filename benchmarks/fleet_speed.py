@@ -15,6 +15,10 @@ on/off, PIM + baseline points):
 * ``fleet/specs_*`` — the spec-lifted facade: a (4 SystemSpec variants x
   shapes) design grid as per-variant executors + per-point calls vs ONE
   heterogeneous ``run_many`` fleet.
+* ``fleet/mesh_*`` — lane execution backends on the same prebuilt
+  streams: the threaded per-device dispatch vs ONE ``shard_map``
+  program per slab over a 1-D ``lanes`` mesh, at mesh sizes {1, 2, 4}
+  (bounded by visible devices; bit-exactness asserted).
 * ``fleet/serve_replan_*`` — repeated serving-loop telemetry queries
   (fresh planner per query, the replan pattern) with the resolved-lane
   LRU disabled vs enabled.
@@ -141,6 +145,32 @@ def main(quick: bool = False) -> dict:
           f"{n/resolve_batch_s:.1f}")
     print(f"fleet/resolve_speedup,{resolve_batch_s*1e3:.1f},"
           f"{resolve_loop_s/resolve_batch_s:.1f}")
+
+    # Mesh lane execution: the same prebuilt streams resolved by the
+    # threaded per-device dispatch (the resolve_batched row above) vs
+    # ONE shard_map program per bucketed slab, at every mesh size the
+    # visible devices allow.  Cycle counts are asserted bit-identical,
+    # so the mesh rows always track a correct backend.
+    mesh_sizes = [m for m in (1, 2, 4)
+                  if m <= len(engine.lane_devices())]
+    mesh_row_s: dict[int, float] = {}
+    for m in mesh_sizes:
+        with engine.lane_mesh_scope(m):
+            engine.lane_cache_clear()           # else warm-up is LRU hits
+            engine.resolve_fleet(points)        # warm the mesh compiles
+            engine.lane_cache_clear()
+            t0 = time.perf_counter()
+            meshed = engine.resolve_fleet(points)
+            mesh_row_s[m] = time.perf_counter() - t0
+        for solo, fr in zip(looped, meshed):
+            np.testing.assert_array_equal(solo, fr.totals)
+        print(f"fleet/mesh_shardmap_{m},{mesh_row_s[m]*1e6/n:.1f},"
+              f"{n/mesh_row_s[m]:.1f}")
+    mesh_best_s = min(mesh_row_s.values())
+    print(f"fleet/mesh_threaded,{resolve_batch_s*1e6/n:.1f},"
+          f"{n/resolve_batch_s:.1f}")
+    print(f"fleet/mesh_speedup,{mesh_best_s*1e3:.1f},"
+          f"{resolve_batch_s/mesh_best_s:.1f}")
 
     # End to end: fresh executors so neither path reuses built streams.
     # Warm the keyed fleet path too (its dedupe can produce slab shapes
@@ -282,6 +312,10 @@ def main(quick: bool = False) -> dict:
                 devices=len(engine.lane_devices()),
                 plan_speedup=plan_ref_s / plan_vec_s,
                 resolve_speedup=resolve_loop_s / resolve_batch_s,
+                mesh_sizes=mesh_sizes,
+                mesh_speedup=resolve_batch_s / mesh_best_s,
+                mesh_step_us={m: s * 1e6 / n
+                              for m, s in mesh_row_s.items()},
                 sweep_speedup=sweep_loop_s / sweep_batch_s,
                 specs_speedup=specs_loop_s / specs_batch_s,
                 serve_replan_speedup=replan_cold_s / replan_warm_s,

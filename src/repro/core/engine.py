@@ -32,6 +32,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+try:                                   # jax >= 0.6 promotes it to jax.*
+    from jax import shard_map as _shard_map
+except ImportError:                    # jax 0.4.x/0.5.x
+    from jax.experimental.shard_map import shard_map as _shard_map
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
 from . import commands as C
 from .timing import TimingCycles
 
@@ -277,12 +283,30 @@ def _build_step(nb: int):
 # ---------------------------------------------------------------------------
 
 _RESOLVERS: dict[int, Callable] = {}
+_MESH_RESOLVERS: dict[tuple[int, Mesh], Callable] = {}
 
 # Scan unroll factor: amortizes the compiled loop's per-step overhead
 # (the step body is ~a hundred tiny int32 ops, so trip-count overhead is
 # a real fraction of the cycle-resolution cost on CPU).  Bit-identical
 # to unroll=1 — the parity/conformance suites run against the oracle.
 _SCAN_UNROLL = 4
+
+
+def _lane_runner(num_banks: int):
+    """The single-lane scan ``(cyc, stream) -> (issue, total)`` for one
+    bank count — the body both the vmapped and the shard_map resolvers
+    wrap, so the two paths share semantics by construction."""
+    step = _build_step(num_banks)
+
+    def run_one(cyc, stream):
+        def body(st, cmd):
+            return step(cyc, st, cmd)
+
+        st, issue = jax.lax.scan(body, _fresh_state(num_banks), stream,
+                                 unroll=_SCAN_UNROLL)
+        return issue, st.drain
+
+    return run_one
 
 
 def _fleet_resolver(num_banks: int):
@@ -296,29 +320,45 @@ def _fleet_resolver(num_banks: int):
     """
     fn = _RESOLVERS.get(num_banks)
     if fn is None:
-        step = _build_step(num_banks)
-
-        def run_one(cyc, stream):
-            def body(st, cmd):
-                return step(cyc, st, cmd)
-
-            st, issue = jax.lax.scan(body, _fresh_state(num_banks), stream,
-                                     unroll=_SCAN_UNROLL)
-            return issue, st.drain
-
-        fn = jax.jit(jax.vmap(run_one))
+        fn = jax.jit(jax.vmap(_lane_runner(num_banks)))
         _RESOLVERS[num_banks] = fn
+    return fn
+
+
+def _mesh_resolver(num_banks: int, mesh: Mesh):
+    """The jitted ``shard_map`` resolver for one (bank count, mesh).
+
+    Same signature as :func:`_fleet_resolver`, but the fleet axis is a
+    *mesh* axis: the ``(F, ...)`` inputs are sharded over the mesh's
+    ``lanes`` dimension and every device runs the identical vmapped scan
+    on its ``F / mesh.size`` rows — ONE compiled SPMD program per
+    (num_banks, per-shard width bucket, length bucket), so
+    :func:`compile_cache_size` stays as flat under a mesh as under the
+    threaded dispatch.  Lanes are independent, so the program contains no
+    collectives and results are bit-identical to the single-device path.
+    """
+    key = (num_banks, mesh)
+    fn = _MESH_RESOLVERS.get(key)
+    if fn is None:
+        spec = PartitionSpec(mesh.axis_names[0])
+        fn = jax.jit(_shard_map(jax.vmap(_lane_runner(num_banks)),
+                                mesh=mesh, in_specs=(spec, spec),
+                                out_specs=(spec, spec)))
+        _MESH_RESOLVERS[key] = fn
     return fn
 
 
 def compile_cache_size() -> int:
     """Number of engine executables compiled so far (all resolvers).
 
-    One per (num_banks, fleet-width bucket, stream-length bucket); the
-    traced timing configuration contributes nothing, which is what the
-    fleet tests assert across ``SystemSpec`` variants.
+    One per (num_banks, fleet-width bucket, stream-length bucket) — for
+    the mesh resolvers the width bucket is *per shard*, so the count is
+    independent of the mesh size; the traced timing configuration
+    contributes nothing, which is what the fleet tests assert across
+    ``SystemSpec`` variants.
     """
-    return sum(fn._cache_size() for fn in _RESOLVERS.values())
+    return (sum(fn._cache_size() for fn in _RESOLVERS.values())
+            + sum(fn._cache_size() for fn in _MESH_RESOLVERS.values()))
 
 
 def _length_bucket(n: int) -> int:
@@ -468,6 +508,84 @@ def lane_devices() -> list:
     return devs[: max(1, min(n, len(devs)))]
 
 
+# ---------------------------------------------------------------------------
+# Mesh-sharded lane execution: when a 1-D ``lanes`` mesh is configured,
+# every bucketed slab resolves as ONE jitted shard_map program whose fleet
+# axis is sharded over the mesh — the compiled-program-per-(banks, bucket)
+# story of the ROADMAP's fleet axis at any device count.  The thread-per-
+# device dispatch above remains the fallback and the parity oracle
+# (tests/test_mesh.py asserts bit-identity between the two).
+# ---------------------------------------------------------------------------
+
+_LANE_MESH: Mesh | None = None
+
+
+def build_lane_mesh(n: int) -> Mesh:
+    """Construct (without configuring) a 1-D ``lanes`` mesh over the
+    first ``n`` visible devices — the one place that validates lane-mesh
+    sizes (``launch.mesh.make_lane_mesh`` delegates here)."""
+    devs = jax.devices()
+    if not 1 <= n <= len(devs):
+        raise ValueError(
+            f"lane mesh size {n} needs 1..{len(devs)} of the "
+            f"visible devices (hint: XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={n})")
+    return Mesh(np.array(devs[:n]), ("lanes",))
+
+
+def configure_lane_mesh(mesh: "Mesh | int | None") -> Mesh | None:
+    """Select the mesh backend for lane resolution.
+
+    ``None`` restores the threaded fallback; an ``int`` n builds a 1-D
+    ``lanes`` mesh over the first n visible devices; a prebuilt 1-D
+    :class:`jax.sharding.Mesh` is used as-is (its single axis is the lane
+    axis, whatever its name).  Returns the configured mesh (or None).
+    """
+    global _LANE_MESH
+    if mesh is None:
+        _LANE_MESH = None
+        return None
+    if isinstance(mesh, int):
+        mesh = build_lane_mesh(mesh)
+    if len(mesh.axis_names) != 1:
+        raise ValueError(f"lane mesh must be 1-D, got axes "
+                         f"{mesh.axis_names}")
+    _LANE_MESH = mesh
+    return mesh
+
+
+def lane_mesh() -> Mesh | None:
+    """The configured lane mesh (None = threaded dispatch)."""
+    return _LANE_MESH
+
+
+class lane_mesh_scope:
+    """Context manager: run lane resolution under ``mesh``, then restore
+    the previous backend (used by the serve cell, benchmarks, tests)."""
+
+    def __init__(self, mesh: "Mesh | int | None"):
+        self._mesh = mesh
+
+    def __enter__(self):
+        self._prev = lane_mesh()
+        return configure_lane_mesh(self._mesh)
+
+    def __exit__(self, *exc):
+        global _LANE_MESH
+        _LANE_MESH = self._prev
+        return False
+
+
+def _mesh_width(n: int, m: int) -> int:
+    """Global fleet width for ``n`` lanes on an ``m``-way mesh.
+
+    The *per-shard* width is power-of-two bucketed (so the executable
+    count stays O(log width), exactly like the threaded path) and every
+    shard gets the same shape — the global width is ``m`` times that.
+    """
+    return _fleet_bucket(-(-n // m)) * m
+
+
 # Padded slab buffers are reused across resolve calls (serving loops
 # re-pack identical shapes every step); each shape keeps at most two
 # spares.  Buffers are only recycled after the call's device arrays are
@@ -509,6 +627,11 @@ def resolve_lanes(
     as traced data.  Returns ``(issue cycles, total cycles)`` per lane,
     in input order; issue arrays are read-only (deduplicated lanes and
     the resolved-lane LRU share them).
+
+    Backend: with a lane mesh configured (:func:`configure_lane_mesh`)
+    each slab runs as ONE ``shard_map`` program over the mesh's
+    ``lanes`` axis (bit-identical by contract — tests/test_mesh.py);
+    otherwise slabs are thread-dispatched across ``lane_devices()``.
 
     ``keys`` — optional per-lane *structural* identity: a hashable value
     the planner guarantees to determine the stream bytes (equal key ==
@@ -579,6 +702,52 @@ def resolve_lanes(
         groups.setdefault((cyc.num_banks, _length_bucket(s.shape[0])),
                           []).append(u)
 
+    def _store(chunk: list[int], iss, tot) -> None:
+        """Write one slab's rows (true lengths) into the result arrays
+        and the lane LRU — shared by the threaded and mesh paths, and
+        the reason padded tail rows never contribute: only ``chunk``
+        rows are ever read back."""
+        for row, u in enumerate(chunk):
+            if need_issue:
+                # copy: a view would pin the whole padded slab;
+                # read-only: results are shared between deduped
+                # lanes and the LRU, so mutation must be an error
+                arr = iss[row, : uniq[u][1].shape[0]].copy()
+                arr.setflags(write=False)
+                issues[u] = arr
+            for v in (u, *alias[u]):
+                totals[v] = tot[row]
+                issues[v] = issues[u]
+                _lane_cache_put(uniq[v][2], int(tot[row]), issues[u])
+
+    mesh = lane_mesh()
+    if mesh is not None:
+        # Mesh path: every (banks, length-bucket) group runs as ONE
+        # shard_map program per <=(128 x mesh) slab — the fleet axis is
+        # sharded over the ``lanes`` mesh axis, the width is padded so
+        # each shard gets the same power-of-two bucket, and tail rows
+        # (config of lane 0, all-NOP streams) are masked by _store.
+        sharding = NamedSharding(mesh, PartitionSpec(mesh.axis_names[0]))
+        m = mesh.size
+        for (nb, length), idxs in sorted(groups.items()):
+            for lo in range(0, len(idxs), _MAX_WIDTH * m):
+                chunk = idxs[lo:lo + _MAX_WIDTH * m]
+                width = _mesh_width(len(chunk), m)
+                buf = _take_slab(width, length)
+                for row, u in enumerate(chunk):
+                    s = uniq[u][1]
+                    buf[row, : s.shape[0]] = s
+                cycs = [uniq[u][0] for u in chunk]
+                cycs += [cycs[0]] * (width - len(chunk))
+                placed = (jax.device_put(stack_cycles(cycs), sharding),
+                          jax.device_put(buf, sharding))
+                iss, tot = _mesh_resolver(nb, mesh)(*placed)
+                tot = np.asarray(tot)
+                _store(chunk, np.asarray(iss) if need_issue else None, tot)
+                _give_slab(buf)
+        return [(issues[lane_of[i]], int(totals[lane_of[i]]))
+                for i in range(len(lane_of))]
+
     # Chunk each group into <=128-lane slabs, then greedily balance the
     # slabs across devices by padded step count (width x length).
     slabs: list[tuple[int, list[int], int, int]] = []
@@ -617,19 +786,7 @@ def resolve_lanes(
         for nb, chunk, (cycs, batch) in jobs:
             iss, tot = _fleet_resolver(nb)(cycs, batch)
             tot = np.asarray(tot)
-            iss = np.asarray(iss) if need_issue else None
-            for row, u in enumerate(chunk):
-                if need_issue:
-                    # copy: a view would pin the whole padded slab;
-                    # read-only: results are shared between deduped
-                    # lanes and the LRU, so mutation must be an error
-                    arr = iss[row, : uniq[u][1].shape[0]].copy()
-                    arr.setflags(write=False)
-                    issues[u] = arr
-                for v in (u, *alias[u]):
-                    totals[v] = tot[row]
-                    issues[v] = issues[u]
-                    _lane_cache_put(uniq[v][2], int(tot[row]), issues[u])
+            _store(chunk, np.asarray(iss) if need_issue else None, tot)
 
     active = [jobs for jobs in per_dev if jobs]
     if len(active) <= 1:

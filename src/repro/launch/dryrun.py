@@ -332,7 +332,10 @@ def main() -> None:
     ap.add_argument("--arch")
     ap.add_argument("--shape")
     ap.add_argument("--mesh", default="pod1",
-                    choices=["pod1", "pod2", "both"])
+                    help="pod1|pod2|both selects the production mesh for "
+                         "cell lowering; with --pim an integer N instead "
+                         "runs the offload grid's lane resolution as one "
+                         "shard_map program over an N-device 'lanes' mesh")
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--skip-existing", action="store_true")
     ap.add_argument("--variant", default="baseline")
@@ -359,6 +362,15 @@ def main() -> None:
     if args.pim:
         if not args.all and args.arch not in ARCHS:
             ap.error(f"--pim needs --all or --arch from {list(ARCHS)}")
+        if args.mesh.isdigit():
+            from repro.core import engine as lane_engine
+            from repro.launch.mesh import make_lane_mesh
+            lane_engine.configure_lane_mesh(make_lane_mesh(int(args.mesh)))
+            print(f"[pim] lane mesh: shard_map over {args.mesh} device(s)",
+                  flush=True)
+        elif args.mesh != "pod1":
+            ap.error("--pim takes an integer --mesh N (shard_map lane "
+                     "mesh); pod meshes apply to cell lowering only")
         archs = list(ARCHS) if args.all else [args.arch]
         for arch in archs:
             rec = pim_offload_report(arch, scenario=args.scenario,
@@ -378,6 +390,9 @@ def main() -> None:
                       f"{rep['steps']} steps", flush=True)
         sys.exit(0)
 
+    if args.mesh not in ("pod1", "pod2", "both"):
+        ap.error("--mesh must be pod1|pod2|both for cell lowering "
+                 "(integer lane-mesh sizes apply to --pim only)")
     meshes = {"pod1": [False], "pod2": [True],
               "both": [False, True]}[args.mesh]
     cells = all_cells() if args.all else [(args.arch, args.shape)]

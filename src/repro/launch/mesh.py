@@ -37,3 +37,17 @@ def make_host_mesh(model: int = 1):
     """Tiny mesh over the locally visible devices (tests/examples)."""
     n = len(jax.devices())
     return jax.make_mesh((n // model, model), ("data", "model"))
+
+
+def make_lane_mesh(n: int | None = None):
+    """1-D ``lanes`` mesh for the engine's shard_map lane execution.
+
+    This is the mesh the simulation-fleet axis shards over (see
+    ``engine.configure_lane_mesh``) — orthogonal to the model meshes
+    above, which shard *workload* tensors.  ``n=None`` takes every
+    visible device; on a CPU host force the device count first
+    (``XLA_FLAGS=--xla_force_host_platform_device_count=N``).
+    """
+    from repro.core.engine import build_lane_mesh
+
+    return build_lane_mesh(len(jax.devices()) if n is None else n)

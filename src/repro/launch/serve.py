@@ -28,13 +28,13 @@ from repro.serving.policy import POLICIES
 from repro.serving.scenarios import SCENARIOS, make_scenario, run_scenario
 
 
-def run_scenario_mode(args, full_cfg, cfg, params) -> None:
+def run_scenario_mode(args, full_cfg, cfg, params, mesh=None) -> None:
     planner = OffloadPlanner(full_cfg, PimSimulator())
     spec = make_scenario(args.scenario, seed=args.seed, slots=args.slots,
                          quick=args.quick)
     t0 = time.perf_counter()
     trace = run_scenario(spec, cfg, params, planner, policy=args.policy,
-                         fence=args.fence)
+                         fence=args.fence, mesh=mesh)
     dt = time.perf_counter() - t0
     rep = trace["controller"]
     print(f"scenario {args.scenario} (seed={args.seed}, "
@@ -68,6 +68,12 @@ def main() -> None:
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--quick", action="store_true",
                     help="smaller scenario (CI smoke)")
+    ap.add_argument("--mesh", type=int, default=None, metavar="N",
+                    help="run the PIM lane resolution as one shard_map "
+                         "program over an N-device 'lanes' mesh (needs N "
+                         "visible devices, e.g. XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N); "
+                         "default: threaded multi-device dispatch")
     args = ap.parse_args()
 
     full_cfg = ARCHS[args.arch]
@@ -77,12 +83,20 @@ def main() -> None:
                          "see launch/dryrun.py for its decode cells")
     params = M.init_params(cfg, jax.random.PRNGKey(0))
 
+    mesh = None
+    if args.mesh is not None:
+        from repro.launch.mesh import make_lane_mesh
+        mesh = make_lane_mesh(args.mesh)
+        print(f"lane mesh: shard_map over {args.mesh} device(s)")
+
     if args.scenario:
-        run_scenario_mode(args, full_cfg, cfg, params)
+        run_scenario_mode(args, full_cfg, cfg, params, mesh=mesh)
         return
 
     # Offload plan computed against the FULL architecture (the simulator
     # works on real matrix sizes regardless of the smoke model we run).
+    from repro.core import engine as lane_engine
+    lane_engine.configure_lane_mesh(mesh)
     planner = OffloadPlanner(full_cfg, PimSimulator())
     eng = ServingEngine(cfg, params, slots=args.slots, max_seq=128,
                         planner=planner)

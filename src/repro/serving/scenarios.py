@@ -221,7 +221,7 @@ def run_policy_over_trace(planner, policy, batches: Sequence[int],
 def run_scenario(scenario: ScenarioSpec, cfg, params, planner,
                  policy: str = "per-step", fence: bool = True,
                  max_seq: int | None = None,
-                 policy_kw: dict | None = None) -> dict:
+                 policy_kw: dict | None = None, mesh=None) -> dict:
     """Serve the scenario end to end (real model decode) under an
     adaptive offload controller; return the replayable trace record.
 
@@ -229,7 +229,23 @@ def run_scenario(scenario: ScenarioSpec, cfg, params, planner,
     occupancy, offload decisions and planner-derived speedups (pure
     arithmetic over bit-exact engine cycle counts) — never model token
     values, so it can be pinned byte-exactly as a golden fixture.
+
+    ``mesh`` — an optional lane-mesh build (a 1-D ``jax.sharding.Mesh``
+    or a device count; see ``engine.configure_lane_mesh``): the run's
+    PIM lane resolution then executes as one shard_map program per slab
+    instead of the threaded dispatch.  Because mesh resolution is
+    bit-identical, the emitted trace must not change — that is the mesh
+    serve cell's conformance contract (the golden replay test).
     """
+    from repro.core.engine import lane_mesh_scope
+
+    with lane_mesh_scope(mesh):
+        return _run_scenario(scenario, cfg, params, planner, policy,
+                             fence, max_seq, policy_kw)
+
+
+def _run_scenario(scenario, cfg, params, planner, policy, fence,
+                  max_seq, policy_kw) -> dict:
     from .engine import Request, ServingEngine
     from .policy import OffloadController
 
@@ -279,3 +295,17 @@ def replay_batches(trace: dict) -> list[int]:
     """Re-derive the per-tick occupancy of a recorded trace from its
     embedded schedule alone (no model, no planner) — the replay hook."""
     return simulate_batches(ScenarioSpec.from_record(trace["scenario"]))
+
+
+def replay_trace(trace: dict, cfg, params, planner, mesh=None) -> dict:
+    """Re-serve a recorded trace end to end and return the fresh record.
+
+    The scenario schedule, policy and fence mode are taken from the
+    trace itself, so a replay is byte-comparable to the recording —
+    under any ``mesh`` build, since mesh lane execution is bit-identical
+    by contract.  This is how the pinned golden trace validates a mesh
+    serve cell: ``replay_trace(golden, ..., mesh=N) == golden``.
+    """
+    return run_scenario(ScenarioSpec.from_record(trace["scenario"]),
+                        cfg, params, planner, policy=trace["policy"],
+                        fence=trace["fence"], mesh=mesh)

@@ -1,0 +1,22 @@
+"""Shared fixtures: module-state hygiene for the lane resolver.
+
+``engine.configure_lane_devices`` / ``engine.configure_lane_mesh`` set
+process-global state.  A test that forces a device cap or a mesh and
+fails (or simply forgets to restore) would silently change the execution
+backend of every later test in the session — the parity suites would
+then compare a path against itself.  The autouse fixture below makes
+that impossible: every test starts and ends on the default backend
+(env-controlled device list, no mesh).
+"""
+import pytest
+
+from repro.core import engine
+
+
+@pytest.fixture(autouse=True)
+def _reset_lane_backend_state():
+    engine.configure_lane_devices(None)
+    engine.configure_lane_mesh(None)
+    yield
+    engine.configure_lane_devices(None)
+    engine.configure_lane_mesh(None)

@@ -1,0 +1,405 @@
+"""Mesh-sharded lane execution: differential parity battery.
+
+The contract of ``engine.configure_lane_mesh``: resolving any fleet as
+ONE shard_map program per bucketed slab over a 1-D ``lanes`` mesh is
+*bit-identical* to the threaded multi-device dispatch and to the
+single-device fallback — at every mesh size — with
+``engine.compile_cache_size()`` independent of both the mesh size and
+the number of ``SystemSpec`` variants.  Three layers:
+
+1. *Engine* — fuzzed multi-spec fleets (hypothesis when available, a
+   deterministic seeded corpus otherwise) resolved at mesh size 1
+   in-process, and at mesh sizes {1, 2, 4} in a forced-4-host-device
+   subprocess (the existing 4-device pattern), lane-exact against both
+   fallback paths.
+2. *Padding/masking* — for random lane counts and mesh sizes, the
+   slab→shard padding (``engine._mesh_width``) always yields equal
+   power-of-two per-shard buckets, and padded tail lanes never leak
+   into results or the lane LRU.
+3. *Serve cell* — the pinned golden serve trace replays byte-equal
+   through ``replay_trace(..., mesh=...)`` (the mesh serve cell), and
+   the facade (``run_many``) is result-identical under a mesh.
+
+Plus the module-state regression: ``lane_devices()`` must track
+``configure_lane_devices`` reconfiguration (the autouse conftest
+fixture keeps per-test state clean; this asserts the tracking itself).
+"""
+import json
+import os
+import pathlib
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import HealthCheck, given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:        # collection must never hard-fail
+    HAVE_HYPOTHESIS = False
+
+import jax
+
+from repro.core import engine
+from repro.core.timing import DEFAULT_SYSTEM, LpddrTimings, SystemSpec
+
+from test_conformance import fleet_from_seed
+from test_engine import build_valid_stream, random_op_tuples
+
+GOLDEN = pathlib.Path(__file__).parent / "golden" / "serve_trace.json"
+
+
+@pytest.fixture(autouse=True)
+def _fresh_lane_cache():
+    engine.configure_lane_cache(4096)
+    yield
+    engine.configure_lane_cache(4096)
+
+
+def _local_mesh_size() -> int:
+    """Largest mesh this process can build (1 under stock CPU tier-1,
+    4 under the CI mesh job's forced host devices)."""
+    return min(4, len(jax.devices()))
+
+
+# ---------------------------------------------------------------------
+# Engine layer: fuzzed parity at mesh size 1, in-process
+# ---------------------------------------------------------------------
+
+def assert_mesh_matches_fallbacks(points, mesh_size: int = 1):
+    """Resolve one multi-spec fleet three ways; demand bit-identity."""
+    pts = [(spec.derive_cycles(), streams) for spec, streams in points]
+    engine.configure_lane_mesh(None)
+    threaded = engine.resolve_fleet(pts)
+    engine.lane_cache_clear()
+    engine.configure_lane_devices(1)
+    solo = engine.resolve_fleet(pts)
+    engine.configure_lane_devices(None)
+    engine.lane_cache_clear()
+    with engine.lane_mesh_scope(mesh_size):
+        meshed = engine.resolve_fleet(pts)
+    for a, b, c in zip(threaded, solo, meshed):
+        np.testing.assert_array_equal(a.totals, c.totals)
+        np.testing.assert_array_equal(b.totals, c.totals)
+        for ia, ic in zip(a.issue, c.issue):
+            np.testing.assert_array_equal(ia, ic)
+
+
+if HAVE_HYPOTHESIS:
+    from test_conformance import _point_strategy
+
+    @settings(max_examples=8, deadline=None,
+              suppress_health_check=[HealthCheck.too_slow,
+                                     HealthCheck.data_too_large])
+    @given(st.lists(_point_strategy(), min_size=1, max_size=3))
+    def test_fuzzed_mesh_parity(points):
+        assert_mesh_matches_fallbacks(points)
+else:                      # deterministic fallback when hypothesis absent
+    @pytest.mark.parametrize("seed", range(6))
+    def test_fuzzed_mesh_parity(seed):
+        assert_mesh_matches_fallbacks(fleet_from_seed(seed, n_points=3))
+
+
+def test_mesh_compile_cache_spec_invariant():
+    """Under a mesh, new SystemSpec variants on warmed shapes compile
+    nothing — the traced-timing story survives shard_map.  (The fresh
+    variants keep each point's bank count: num_banks is static metadata,
+    so changing it is SUPPOSED to compile.)"""
+    fleet = fleet_from_seed(17, n_points=3)
+    points = [(sp.derive_cycles(), streams) for sp, streams in fleet]
+    with engine.lane_mesh_scope(1):
+        engine.resolve_fleet(points)                 # pay bucket compiles
+        warm = engine.compile_cache_size()
+        swapped = [
+            (SystemSpec(timings=LpddrTimings(
+                num_bankgroups=sp.timings.num_bankgroups,
+                tRCD=26.0 + i)).derive_cycles(), streams)
+            for i, (sp, streams) in enumerate(fleet)]
+        engine.resolve_fleet(swapped)
+        assert engine.compile_cache_size() == warm, \
+            "spec variants recompiled under mesh"
+
+
+# ---------------------------------------------------------------------
+# Padding/masking properties
+# ---------------------------------------------------------------------
+
+def test_mesh_width_padding_properties():
+    """For random (lane count, mesh size): the global width is a
+    multiple of the mesh size, covers every lane, and every shard gets
+    one identical power-of-two (>= 4) bucket — so ONE program shape per
+    (banks, bucket) serves any mesh size."""
+    rng = np.random.default_rng(0)
+    for _ in range(300):
+        n = int(rng.integers(1, 700))
+        m = int(rng.integers(1, 9))
+        w = engine._mesh_width(n, m)
+        per = w // m
+        assert w % m == 0 and w >= n
+        assert per >= 4 and per & (per - 1) == 0, (n, m, per)
+        assert per == engine._fleet_bucket(-(-n // m))
+        # padding is bounded: the per-shard bucket is < 2x the per-shard
+        # lane share (except at the minimum bucket of 4)
+        assert per == 4 or per < 2 * (-(-n // m)), (n, m, per)
+
+
+@pytest.mark.parametrize("n_lanes", [1, 2, 3, 5, 7, 12, 19])
+def test_padded_lanes_are_masked(n_lanes):
+    """Random slab counts on the local mesh: per-lane results are an
+    in-order match of the unpadded (threaded) resolve, and the padded
+    tail rows never pollute totals or the lane LRU."""
+    rng = np.random.default_rng(100 + n_lanes)
+    cyc = DEFAULT_SYSTEM.derive_cycles()
+    lanes = [(cyc, build_valid_stream(random_op_tuples(rng, max_ops=25)))
+             for _ in range(n_lanes)]
+    keys = [("pad", n_lanes, i) for i in range(len(lanes))]
+    plain = engine.resolve_lanes(lanes, keys=keys)
+    engine.configure_lane_cache(4096)        # reset counters + entries
+    with engine.lane_mesh_scope(_local_mesh_size()):
+        meshed = engine.resolve_lanes(lanes, keys=keys)
+    info = engine.lane_cache_info()
+    assert info["size"] <= len(lanes), \
+        "padded tail rows leaked into the lane cache"
+    for (ia, ta), (ib, tb) in zip(plain, meshed):
+        assert ta == tb
+        np.testing.assert_array_equal(ia, ib)
+
+
+def test_mesh_handles_width_beyond_one_slab():
+    """> _MAX_WIDTH x mesh lanes split into multiple shard_map slabs."""
+    rng = np.random.default_rng(7)
+    cyc = DEFAULT_SYSTEM.derive_cycles()
+    base = build_valid_stream(random_op_tuples(rng, max_ops=12))
+    # many distinct lanes in ONE length bucket: vary the (timing-inert)
+    # column field so every lane has distinct bytes but equal length
+    lanes = []
+    for i in range(engine._MAX_WIDTH + 9):
+        s = base.copy()
+        s[:, 3] = i
+        lanes.append((cyc, s))
+    plain = engine.resolve_lanes(lanes, need_issue=False)
+    engine.lane_cache_clear()
+    with engine.lane_mesh_scope(_local_mesh_size()):
+        meshed = engine.resolve_lanes(lanes, need_issue=False)
+    assert [t for _i, t in plain] == [t for _i, t in meshed]
+
+
+# ---------------------------------------------------------------------
+# Forced 4-host-device subprocess: mesh sizes {1, 2, 4}
+# ---------------------------------------------------------------------
+
+_CHILD = r"""
+import json, sys
+import numpy as np
+sys.path.insert(0, __TESTDIR__)
+
+import jax
+assert jax.device_count() == 4, jax.device_count()
+
+from repro.core import engine
+from repro.core.timing import DEFAULT_SYSTEM, LpddrTimings, SystemSpec
+from test_conformance import fleet_from_seed
+from test_engine import build_valid_stream, random_op_tuples
+
+try:
+    from hypothesis import HealthCheck, given, settings, strategies as st
+    from test_conformance import _point_strategy
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+engine.configure_lane_cache(0)           # measure real resolution
+
+MESH_SIZES = (1, 2, 4)
+
+
+def check(points):
+    pts = [(sp.derive_cycles(), streams) for sp, streams in points]
+    engine.configure_lane_mesh(None)
+    engine.configure_lane_devices(1)
+    solo = engine.resolve_fleet(pts)
+    engine.configure_lane_devices(None)
+    threaded = engine.resolve_fleet(pts)
+    for m in MESH_SIZES:
+        with engine.lane_mesh_scope(m):
+            meshed = engine.resolve_fleet(pts)
+        for a, b, c in zip(solo, threaded, meshed):
+            np.testing.assert_array_equal(a.totals, c.totals)
+            np.testing.assert_array_equal(b.totals, c.totals)
+            for ia, ic in zip(a.issue, c.issue):
+                np.testing.assert_array_equal(ia, ic)
+
+
+# Compile-cache flatness FIRST, while every per-mesh resolver is cold:
+# resolving the SAME fleet at every mesh size compiles the SAME number
+# of executables (per-shard width bucketing), and swapping in new spec
+# variants — same bank counts, new timings — compiles nothing at any
+# size.
+fleet = fleet_from_seed(23, n_points=4)
+points = [(sp.derive_cycles(), streams) for sp, streams in fleet]
+deltas = {}
+for m in MESH_SIZES:
+    with engine.lane_mesh_scope(m):
+        before = engine.compile_cache_size()
+        engine.resolve_fleet(points)
+        deltas[m] = engine.compile_cache_size() - before
+        warm = engine.compile_cache_size()
+        swapped = [
+            (SystemSpec(timings=LpddrTimings(
+                num_bankgroups=sp.timings.num_bankgroups,
+                tRCD=27.0 + m + i)).derive_cycles(), streams)
+            for i, (sp, streams) in enumerate(fleet)]
+        engine.resolve_fleet(swapped)
+        assert engine.compile_cache_size() == warm, \
+            f"spec variants recompiled at mesh {m}"
+assert len(set(deltas.values())) == 1, \
+    f"compile count depends on mesh size: {deltas}"
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=6, deadline=None,
+              suppress_health_check=[HealthCheck.too_slow,
+                                     HealthCheck.data_too_large])
+    @given(st.lists(_point_strategy(), min_size=1, max_size=3))
+    def fuzz(points):
+        check(points)
+    fuzz()
+else:
+    for seed in range(5):
+        check(fleet_from_seed(seed, n_points=3))
+
+# Padding property across mesh sizes: random slab counts, in-order
+# equality with the unpadded threaded resolve.
+rng = np.random.default_rng(5)
+cyc = DEFAULT_SYSTEM.derive_cycles()
+for n in (1, 2, 5, 9, 17):
+    lanes = [(cyc, build_valid_stream(random_op_tuples(rng, max_ops=20)))
+             for _ in range(n)]
+    engine.configure_lane_mesh(None)
+    plain = engine.resolve_lanes(lanes)
+    for m in MESH_SIZES:
+        with engine.lane_mesh_scope(m):
+            meshed = engine.resolve_lanes(lanes)
+        for (ia, ta), (ib, tb) in zip(plain, meshed):
+            assert ta == tb, (n, m)
+            np.testing.assert_array_equal(ia, ib)
+
+print(json.dumps({"ok": True, "hypothesis": HAVE_HYPOTHESIS,
+                  "compiles_per_mesh": deltas[4]}))
+"""
+
+
+def test_mesh_parity_forced_four_devices():
+    """Forced 4-host-device child: fuzzed fleets bit-identical across
+    mesh sizes {1, 2, 4} vs both fallback paths, compile count
+    mesh-size- and spec-variant-invariant, padding masked."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                        + " --xla_force_host_platform_device_count=4"
+                        ).strip()
+    env["JAX_PLATFORMS"] = "cpu"
+    src = os.path.join(os.path.dirname(__file__), os.pardir, "src")
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    code = _CHILD.replace("__TESTDIR__", repr(os.path.dirname(__file__)))
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=540)
+    assert out.returncode == 0, out.stderr[-2000:]
+    payload = json.loads(out.stdout.strip().splitlines()[-1])
+    assert payload["ok"]
+
+
+# ---------------------------------------------------------------------
+# Serve cell: golden trace replay + facade parity under a mesh
+# ---------------------------------------------------------------------
+
+def test_golden_trace_replays_bit_identically_on_mesh():
+    """The pinned serve trace, replayed through the mesh serve cell, is
+    byte-equal to the recording — scheduling, offload sets, telemetry
+    and realized speedup included.  Runs at mesh size 1 under stock
+    tier-1 and at mesh size 4 under the CI mesh job's forced devices."""
+    from repro.configs import ARCHS, smoke_config
+    from repro.models import model as M
+    from repro.serving.offload import OffloadPlanner
+    from repro.serving.scenarios import replay_trace
+
+    fixture = json.loads(GOLDEN.read_text())
+    cfg = smoke_config(ARCHS["granite-8b"])
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    planner = OffloadPlanner(ARCHS["granite-8b"])
+    mesh = _local_mesh_size()
+    fresh = json.loads(json.dumps(
+        replay_trace(fixture, cfg, params, planner, mesh=mesh)))
+    assert engine.lane_mesh() is None, "mesh scope must not leak"
+    assert set(fresh) == set(fixture)
+    for key in fixture:
+        assert fresh[key] == fixture[key], \
+            f"mesh replay drift at {key} (mesh={mesh})"
+
+
+def test_run_many_identical_under_mesh():
+    """Facade layer: a heterogeneous (spec x shape) run_many grid under
+    a mesh matches the threaded resolution field by field."""
+    from repro.pimkernel.executor import GemvRequest, PimExecutor
+    from repro.pimkernel.tileconfig import PimDType
+
+    specs = [DEFAULT_SYSTEM,
+             SystemSpec(timings=LpddrTimings(tRCD=24.0, tRP=22.0))]
+    reqs = [r for sp in specs
+            for r in (GemvRequest.pim(256, 1024, PimDType.W8A8, spec=sp),
+                      GemvRequest.pim(512, 512, PimDType.W4A8, fence=True,
+                                      spec=sp),
+                      GemvRequest.baseline(256, 1024, PimDType.W8A8,
+                                           spec=sp))]
+    plain = PimExecutor().run_many(reqs)
+    engine.lane_cache_clear()
+    with engine.lane_mesh_scope(_local_mesh_size()):
+        meshed = PimExecutor().run_many(reqs)
+    for a, b in zip(plain, meshed):
+        assert a.cycles == b.cycles and a.ns == b.ns
+        assert a.energy == b.energy
+        np.testing.assert_array_equal(a.counts, b.counts)
+
+
+# ---------------------------------------------------------------------
+# Module-state hygiene (the sticky configure_lane_devices regression)
+# ---------------------------------------------------------------------
+
+def test_lane_devices_tracks_reconfiguration():
+    """lane_devices() follows configure_lane_devices immediately — a
+    forced cap does not stick once reset to None (the autouse fixture
+    in conftest.py relies on exactly this)."""
+    all_devs = jax.devices()
+    assert engine.lane_devices() == all_devs[:len(engine.lane_devices())]
+    engine.configure_lane_devices(1)
+    assert engine.lane_devices() == all_devs[:1]
+    engine.configure_lane_devices(None)
+    default = engine.lane_devices()
+    n_env = int(os.environ.get("REPRO_LANE_DEVICES", "0") or 0)
+    expect = all_devs[:n_env] if n_env else all_devs
+    assert default == expect, "configure_lane_devices(None) stuck"
+
+
+def test_configure_lane_mesh_validation_and_scope():
+    devs = jax.devices()
+    with pytest.raises(ValueError, match="lane mesh size"):
+        engine.configure_lane_mesh(0)
+    with pytest.raises(ValueError, match="lane mesh size"):
+        engine.configure_lane_mesh(len(devs) + 1)
+    from jax.sharding import Mesh
+    if len(devs) >= 2:
+        two_d = Mesh(np.array(devs[:2]).reshape(2, 1), ("a", "b"))
+        with pytest.raises(ValueError, match="1-D"):
+            engine.configure_lane_mesh(two_d)
+    # the scope restores the previous backend even on exceptions
+    assert engine.lane_mesh() is None
+    with pytest.raises(RuntimeError, match="boom"):
+        with engine.lane_mesh_scope(1):
+            assert engine.lane_mesh() is not None
+            raise RuntimeError("boom")
+    assert engine.lane_mesh() is None
+    # nested scopes restore the outer mesh, not None
+    with engine.lane_mesh_scope(1):
+        outer = engine.lane_mesh()
+        with engine.lane_mesh_scope(None):
+            assert engine.lane_mesh() is None
+        assert engine.lane_mesh() is outer
