@@ -282,28 +282,56 @@ def _build_step(nb: int):
 # The fleet resolver: one compilation per (num_banks, fleet/length bucket).
 # ---------------------------------------------------------------------------
 
-_RESOLVERS: dict[int, Callable] = {}
-_MESH_RESOLVERS: dict[tuple[int, Mesh], Callable] = {}
+_RESOLVERS: dict[tuple[int, int], Callable] = {}
+_MESH_RESOLVERS: dict[tuple[int, Mesh, int], Callable] = {}
+_PALLAS_RESOLVERS: dict[tuple[int, int], Callable] = {}
 
 # Scan unroll factor: amortizes the compiled loop's per-step overhead
 # (the step body is ~a hundred tiny int32 ops, so trip-count overhead is
 # a real fraction of the cycle-resolution cost on CPU).  Bit-identical
 # to unroll=1 — the parity/conformance suites run against the oracle.
+# Default 4; override with configure_scan_unroll() or REPRO_SCAN_UNROLL.
 _SCAN_UNROLL = 4
+_SCAN_UNROLL_OVERRIDE: int | None = None
 
 
-def _lane_runner(num_banks: int):
+def configure_scan_unroll(n: int | None) -> int:
+    """Set the scan unroll factor (None restores env/default).
+
+    Unroll is a pure lowering knob — every value is bit-identical to
+    unroll=1 (asserted by the parity suite); resolvers are cached per
+    (num_banks, unroll), so flipping it never invalidates compiled
+    programs for the other settings.
+    """
+    global _SCAN_UNROLL_OVERRIDE
+    if n is not None and int(n) < 1:
+        raise ValueError(f"scan unroll must be >= 1, got {n}")
+    _SCAN_UNROLL_OVERRIDE = None if n is None else int(n)
+    return scan_unroll()
+
+
+def scan_unroll() -> int:
+    """The active scan unroll factor (override > REPRO_SCAN_UNROLL > 4)."""
+    if _SCAN_UNROLL_OVERRIDE is not None:
+        return _SCAN_UNROLL_OVERRIDE
+    env = int(os.environ.get("REPRO_SCAN_UNROLL", "0") or 0)
+    return env if env >= 1 else _SCAN_UNROLL
+
+
+def _lane_runner(num_banks: int, unroll: int | None = None):
     """The single-lane scan ``(cyc, stream) -> (issue, total)`` for one
-    bank count — the body both the vmapped and the shard_map resolvers
-    wrap, so the two paths share semantics by construction."""
+    bank count — the body the vmapped, shard_map and Pallas resolvers
+    all wrap, so every backend shares semantics by construction."""
     step = _build_step(num_banks)
+    if unroll is None:
+        unroll = scan_unroll()
 
     def run_one(cyc, stream):
         def body(st, cmd):
             return step(cyc, st, cmd)
 
         st, issue = jax.lax.scan(body, _fresh_state(num_banks), stream,
-                                 unroll=_SCAN_UNROLL)
+                                 unroll=unroll)
         return issue, st.drain
 
     return run_one
@@ -318,10 +346,11 @@ def _fleet_resolver(num_banks: int):
     (F,))``.  The timing configuration is traced, so the jit cache keys
     only on shapes — new spec variants reuse the existing executable.
     """
-    fn = _RESOLVERS.get(num_banks)
+    key = (num_banks, scan_unroll())
+    fn = _RESOLVERS.get(key)
     if fn is None:
-        fn = jax.jit(jax.vmap(_lane_runner(num_banks)))
-        _RESOLVERS[num_banks] = fn
+        fn = jax.jit(jax.vmap(_lane_runner(num_banks, key[1])))
+        _RESOLVERS[key] = fn
     return fn
 
 
@@ -337,14 +366,32 @@ def _mesh_resolver(num_banks: int, mesh: Mesh):
     threaded dispatch.  Lanes are independent, so the program contains no
     collectives and results are bit-identical to the single-device path.
     """
-    key = (num_banks, mesh)
+    key = (num_banks, mesh, scan_unroll())
     fn = _MESH_RESOLVERS.get(key)
     if fn is None:
         spec = PartitionSpec(mesh.axis_names[0])
-        fn = jax.jit(_shard_map(jax.vmap(_lane_runner(num_banks)),
+        fn = jax.jit(_shard_map(jax.vmap(_lane_runner(num_banks, key[2])),
                                 mesh=mesh, in_specs=(spec, spec),
                                 out_specs=(spec, spec)))
         _MESH_RESOLVERS[key] = fn
+    return fn
+
+
+def _pallas_resolver(num_banks: int):
+    """The jitted Pallas resolver for one bank count.
+
+    Same signature as :func:`_fleet_resolver`; the fleet axis becomes the
+    Pallas grid and the per-lane channel state lives in VMEM/registers
+    for the whole command stream (see ``kernels/lane_scan.py``).  Lazily
+    imported so the engine has no hard dependency on the kernels package.
+    """
+    from repro.kernels import lane_scan
+
+    key = (num_banks, scan_unroll())
+    fn = _PALLAS_RESOLVERS.get(key)
+    if fn is None:
+        fn = lane_scan.make_lane_resolver(num_banks, unroll=key[1])
+        _PALLAS_RESOLVERS[key] = fn
     return fn
 
 
@@ -358,7 +405,79 @@ def compile_cache_size() -> int:
     ``SystemSpec`` variants.
     """
     return (sum(fn._cache_size() for fn in _RESOLVERS.values())
-            + sum(fn._cache_size() for fn in _MESH_RESOLVERS.values()))
+            + sum(fn._cache_size() for fn in _MESH_RESOLVERS.values())
+            + sum(fn._cache_size() for fn in _PALLAS_RESOLVERS.values()))
+
+
+# ---------------------------------------------------------------------------
+# Lane-resolver backend selection: "scan" is the vmapped lax.scan family
+# (single-device / threaded / shard_map dispatch above it); "pallas" swaps
+# the per-slab executable for the Pallas lane kernel, keeping the dedupe /
+# LRU / slab machinery identical.  "auto" resolves to pallas when the
+# kernel is supported on this backend, scan otherwise — and an explicit
+# "pallas" request ALSO falls back to scan when unsupported (capability-
+# detected fallback; the parity suites pin bit-identity between the two).
+# A configured lane mesh takes precedence: shard_map slabs stay on the
+# scan family regardless of the backend setting.
+# ---------------------------------------------------------------------------
+
+_LANE_BACKENDS = ("scan", "pallas", "auto")
+_LANE_BACKEND: str | None = None
+
+
+def configure_lane_backend(name: str | None) -> str:
+    """Select the lane-resolver backend ("scan" | "pallas" | "auto").
+
+    ``None`` restores the default (REPRO_LANE_BACKEND env var, else
+    "scan").  Returns the *requested* backend; the capability-checked
+    choice is :func:`resolved_lane_backend`.
+    """
+    global _LANE_BACKEND
+    if name is not None:
+        name = str(name).lower()
+        if name not in _LANE_BACKENDS:
+            raise ValueError(f"lane backend must be one of "
+                             f"{_LANE_BACKENDS}, got {name!r}")
+    _LANE_BACKEND = name
+    return lane_backend()
+
+
+def lane_backend() -> str:
+    """The requested lane backend (configured > env > "scan")."""
+    if _LANE_BACKEND is not None:
+        return _LANE_BACKEND
+    env = os.environ.get("REPRO_LANE_BACKEND", "").lower()
+    return env if env in _LANE_BACKENDS else "scan"
+
+
+def resolved_lane_backend() -> str:
+    """The backend slabs will actually run on: "scan" or "pallas".
+
+    "pallas"/"auto" requests degrade to "scan" when the Pallas kernel is
+    not runnable here (capability probe, cached per process).
+    """
+    req = lane_backend()
+    if req == "scan":
+        return "scan"
+    from repro.kernels import lane_scan
+    return "pallas" if lane_scan.pallas_lane_supported() else "scan"
+
+
+class lane_backend_scope:
+    """Context manager: run lane resolution on ``name``, then restore the
+    previous backend (benchmarks, parity tests)."""
+
+    def __init__(self, name: str | None):
+        self._name = name
+
+    def __enter__(self):
+        self._prev = _LANE_BACKEND
+        return configure_lane_backend(self._name)
+
+    def __exit__(self, *exc):
+        global _LANE_BACKEND
+        _LANE_BACKEND = self._prev
+        return False
 
 
 def _length_bucket(n: int) -> int:
@@ -425,10 +544,32 @@ _LANE_STATS = {"hits": 0, "misses": 0, "evictions": 0}
 
 
 def configure_lane_cache(maxsize: int) -> None:
-    """Set the lane-cache capacity (entries); 0 disables caching."""
+    """Set the lane-cache capacity (entries); 0 disables caching.
+
+    Calling with the capacity already in effect is a no-op: entries AND
+    the hit/miss/eviction counters survive, so policies that account
+    against the counters (the sticky epoch watches ``misses``) are not
+    skewed by a redundant reconfiguration.  A capacity *change* keeps the
+    old semantics — entries dropped, counters zeroed — which is also the
+    explicit fresh-state escape hatch (or use :func:`lane_cache_reset`).
+    """
     global _LANE_CACHE_MAX
+    maxsize = max(0, int(maxsize))
     with _LANE_CACHE_LOCK:
-        _LANE_CACHE_MAX = max(0, int(maxsize))
+        if maxsize == _LANE_CACHE_MAX:
+            return
+        _LANE_CACHE_MAX = maxsize
+        _LANE_CACHE.clear()
+        for k in _LANE_STATS:
+            _LANE_STATS[k] = 0
+
+
+def lane_cache_reset() -> None:
+    """Drop every cached lane AND zero the counters (capacity survives).
+
+    The test/benchmark fresh-state primitive now that re-configuring an
+    unchanged capacity no longer clears."""
+    with _LANE_CACHE_LOCK:
         _LANE_CACHE.clear()
         for k in _LANE_STATS:
             _LANE_STATS[k] = 0
@@ -449,6 +590,45 @@ def lane_cache_info() -> dict:
         return dict(size=len(_LANE_CACHE), maxsize=_LANE_CACHE_MAX,
                     hits=_LANE_STATS["hits"], misses=_LANE_STATS["misses"],
                     evictions=_LANE_STATS["evictions"])
+
+
+def lane_cache_export() -> list[tuple]:
+    """Snapshot the lane LRU as ``[(key, total, issue | None), ...]`` in
+    LRU order (oldest first, so re-importing preserves eviction order).
+
+    Keys are ``(TimingCycles, 0, structural key)`` / ``(TimingCycles, 1,
+    length, byte digest)`` tuples — plain frozen dataclasses, enums and
+    bytes, so the snapshot pickles (see ``core/warmstart.py`` for the
+    versioned, fingerprinted on-disk format).
+    """
+    with _LANE_CACHE_LOCK:
+        return [(k, total, issue)
+                for k, (total, issue) in _LANE_CACHE.items()]
+
+
+def lane_cache_import(entries: Iterable[tuple]) -> int:
+    """Insert exported entries into the lane LRU; returns the count kept.
+
+    Deliberately silent on the stats counters: warm-starting a process
+    from a snapshot is not engine work, so policies watching ``misses``
+    see the same world as after an in-process warm-up.  Entries beyond
+    capacity evict oldest-first without bumping the eviction counter.
+    """
+    n = 0
+    with _LANE_CACHE_LOCK:
+        if _LANE_CACHE_MAX <= 0:
+            return 0
+        for key, total, issue in entries:
+            if issue is not None:
+                issue = np.asarray(issue)
+                issue.setflags(write=False)
+            _LANE_CACHE[key] = (int(total), issue)
+            _LANE_CACHE.move_to_end(key)
+            n += 1
+        while len(_LANE_CACHE) > _LANE_CACHE_MAX:
+            _LANE_CACHE.popitem(last=False)
+            n -= 1
+    return n
 
 
 def _lane_cache_get(key, need_issue: bool):
@@ -631,7 +811,11 @@ def resolve_lanes(
     Backend: with a lane mesh configured (:func:`configure_lane_mesh`)
     each slab runs as ONE ``shard_map`` program over the mesh's
     ``lanes`` axis (bit-identical by contract — tests/test_mesh.py);
-    otherwise slabs are thread-dispatched across ``lane_devices()``.
+    otherwise slabs are thread-dispatched across ``lane_devices()``,
+    each slab executing on the selected resolver backend
+    (:func:`configure_lane_backend`): the vmapped scan, or the Pallas
+    lane kernel — bit-identical by contract (tests/test_pallas_resolver
+    and the conformance battery run both).
 
     ``keys`` — optional per-lane *structural* identity: a hashable value
     the planner guarantees to determine the stream bytes (equal key ==
@@ -749,7 +933,11 @@ def resolve_lanes(
                 for i in range(len(lane_of))]
 
     # Chunk each group into <=128-lane slabs, then greedily balance the
-    # slabs across devices by padded step count (width x length).
+    # slabs across devices by padded step count (width x length).  The
+    # per-slab executable is the selected backend's (scan vs Pallas);
+    # everything around it — dedupe, LRU, pooling, dispatch — is shared.
+    resolver = (_pallas_resolver if resolved_lane_backend() == "pallas"
+                else _fleet_resolver)
     slabs: list[tuple[int, list[int], int, int]] = []
     for (nb, length), idxs in sorted(groups.items()):
         for lo in range(0, len(idxs), _MAX_WIDTH):
@@ -784,7 +972,7 @@ def resolve_lanes(
 
     def _run_dev(jobs) -> None:
         for nb, chunk, (cycs, batch) in jobs:
-            iss, tot = _fleet_resolver(nb)(cycs, batch)
+            iss, tot = resolver(nb)(cycs, batch)
             tot = np.asarray(tot)
             _store(chunk, np.asarray(iss) if need_issue else None, tot)
 

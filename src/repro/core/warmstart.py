@@ -1,0 +1,202 @@
+"""Persistent warm-start caches: XLA compile cache + on-disk lane LRU.
+
+A fresh simulator process pays two cold-start costs before it reaches
+steady-state throughput: XLA recompilation of the fleet resolvers
+(seconds per (num_banks, width-bucket, length-bucket) triple) and a cold
+resolved-lane LRU (every structural stream key re-resolved once).  Both
+are pure caches of deterministic computations, so both persist:
+
+* :func:`enable_compilation_cache` points JAX's persistent compilation
+  cache at ``<cache_dir>/xla`` — the second process deserializes the
+  compiled executables instead of rebuilding them.
+* :func:`save_lane_snapshot` / :func:`load_lane_snapshot` round-trip the
+  engine's resolved-lane LRU (``engine.lane_cache_export`` /
+  ``lane_cache_import``) through a versioned, fingerprinted pickle at
+  ``<cache_dir>/lanes.pkl``, so a fresh serve process replays cached
+  lanes with *zero* fleet resolves.
+
+The snapshot is advisory, never load-bearing: the fingerprint (blake2b
+over the snapshot format version, the opcode table, and the
+``TimingCycles`` field layout) rejects snapshots written by a different
+engine revision, and *any* failure to read — truncated file, corrupt
+pickle, wrong version, wrong fingerprint — degrades to a cold cache
+instead of raising.  Writes are atomic (tmp + ``os.replace``) so a
+crashed writer can at worst leave the previous snapshot in place.
+
+The launchers (``launch/serve.py`` / ``dryrun.py`` / ``train.py``) and
+benchmarks wire this behind ``--cache-dir`` / ``REPRO_CACHE_DIR`` via
+:func:`enable_warm_start` at startup and :func:`save_warm_start` at exit.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import os
+import pickle
+import tempfile
+
+from . import commands as C
+from . import engine
+from .timing import TimingCycles
+
+SNAPSHOT_VERSION = 1
+_MAGIC = b"repro-lane-snapshot"
+
+_ENV_CACHE_DIR = "REPRO_CACHE_DIR"
+
+
+def cache_dir_from_env() -> str | None:
+    """The ``REPRO_CACHE_DIR`` env knob (None when unset/empty)."""
+    d = os.environ.get(_ENV_CACHE_DIR, "").strip()
+    return d or None
+
+
+def snapshot_fingerprint() -> str:
+    """Engine-revision fingerprint a snapshot must match to load.
+
+    Hashes the things a cached ``(key -> total, issue)`` mapping is only
+    valid under: the snapshot format version, the opcode table (names and
+    count — renumbering opcodes silently changes stream semantics), and
+    the ``TimingCycles`` field layout (keys embed ``TimingCycles``
+    instances; a field added or reordered means old totals no longer
+    describe the same timing model).
+    """
+    h = hashlib.blake2b(digest_size=16)
+    h.update(_MAGIC)
+    h.update(str(SNAPSHOT_VERSION).encode())
+    h.update((",".join(C.OP_NAMES) + f":{C.NUM_OPCODES}").encode())
+    h.update(",".join(
+        f.name for f in dataclasses.fields(TimingCycles)).encode())
+    return h.hexdigest()
+
+
+# ---------------------------------------------------------------------------
+# Lane-LRU snapshot
+# ---------------------------------------------------------------------------
+
+def lane_snapshot_path(cache_dir: str) -> str:
+    return os.path.join(cache_dir, "lanes.pkl")
+
+
+def save_lane_snapshot(cache_dir: str) -> int:
+    """Atomically write the current lane LRU under ``cache_dir``.
+
+    Returns the number of entries written.  An empty cache still writes a
+    (valid, empty) snapshot — "warm but empty" and "never saved" are
+    different states to a replay harness.
+    """
+    os.makedirs(cache_dir, exist_ok=True)
+    entries = engine.lane_cache_export()
+    payload = {
+        "magic": _MAGIC,
+        "version": SNAPSHOT_VERSION,
+        "fingerprint": snapshot_fingerprint(),
+        "entries": entries,
+    }
+    path = lane_snapshot_path(cache_dir)
+    fd, tmp = tempfile.mkstemp(dir=cache_dir, prefix=".lanes-", suffix=".tmp")
+    try:
+        with os.fdopen(fd, "wb") as f:
+            pickle.dump(payload, f, protocol=pickle.HIGHEST_PROTOCOL)
+        os.replace(tmp, path)
+    except BaseException:
+        try:
+            os.unlink(tmp)
+        except OSError:
+            pass
+        raise
+    return len(entries)
+
+
+def load_lane_snapshot(cache_dir: str) -> int:
+    """Load a lane snapshot into the engine's LRU; returns entries kept.
+
+    Corruption-tolerant by contract: any failure mode — missing file,
+    truncation, un-unpicklable bytes, version or fingerprint mismatch,
+    malformed entries — returns 0 and leaves the cache cold.  Never
+    raises.
+    """
+    path = lane_snapshot_path(cache_dir)
+    try:
+        with open(path, "rb") as f:
+            payload = pickle.load(f)
+        if not isinstance(payload, dict):
+            return 0
+        if payload.get("magic") != _MAGIC:
+            return 0
+        if payload.get("version") != SNAPSHOT_VERSION:
+            return 0
+        if payload.get("fingerprint") != snapshot_fingerprint():
+            return 0
+        entries = payload.get("entries")
+        if not isinstance(entries, list):
+            return 0
+        return engine.lane_cache_import(entries)
+    except Exception:      # noqa: BLE001 - cold start beats a crash
+        return 0
+
+
+# ---------------------------------------------------------------------------
+# XLA persistent compilation cache
+# ---------------------------------------------------------------------------
+
+def enable_compilation_cache(cache_dir: str) -> bool:
+    """Point JAX's persistent compilation cache at ``<cache_dir>/xla``.
+
+    Thresholds are dropped to zero so even the engine's small resolver
+    jits persist (the defaults skip sub-second compiles, which is exactly
+    the population a simulator cold-start is made of).  Version-tolerant:
+    tries the modern ``jax.config`` flags first, falls back to the
+    ``compilation_cache.set_cache_dir`` API, and reports False (warm
+    start degrades to lane snapshot only) if neither exists.
+    """
+    xla_dir = os.path.join(cache_dir, "xla")
+    os.makedirs(xla_dir, exist_ok=True)
+    import jax
+
+    try:
+        jax.config.update("jax_compilation_cache_dir", xla_dir)
+        try:
+            jax.config.update("jax_persistent_cache_min_compile_time_secs", 0)
+            jax.config.update("jax_persistent_cache_min_entry_size_bytes", -1)
+        except Exception:  # noqa: BLE001 - thresholds are best-effort
+            pass
+        return True
+    except Exception:      # noqa: BLE001 - older jax: legacy API below
+        pass
+    try:
+        from jax.experimental.compilation_cache import compilation_cache
+        compilation_cache.set_cache_dir(xla_dir)
+        return True
+    except Exception:      # noqa: BLE001 - no persistent cache available
+        return False
+
+
+# ---------------------------------------------------------------------------
+# One-call launcher wiring
+# ---------------------------------------------------------------------------
+
+def enable_warm_start(cache_dir: str | None = None) -> dict:
+    """Enable every persistent cache under ``cache_dir`` (or env knob).
+
+    Returns a small report ``{"cache_dir", "compile_cache", "lanes"}``;
+    with no directory configured it is a no-op reporting
+    ``{"cache_dir": None, ...}`` so launchers can call it
+    unconditionally.
+    """
+    cache_dir = cache_dir or cache_dir_from_env()
+    if not cache_dir:
+        return {"cache_dir": None, "compile_cache": False, "lanes": 0}
+    os.makedirs(cache_dir, exist_ok=True)
+    ok = enable_compilation_cache(cache_dir)
+    lanes = load_lane_snapshot(cache_dir)
+    return {"cache_dir": cache_dir, "compile_cache": ok, "lanes": lanes}
+
+
+def save_warm_start(cache_dir: str | None = None) -> int:
+    """Persist the lane LRU under ``cache_dir`` (or env knob); returns
+    entries written, or -1 when no directory is configured (no-op)."""
+    cache_dir = cache_dir or cache_dir_from_env()
+    if not cache_dir:
+        return -1
+    return save_lane_snapshot(cache_dir)

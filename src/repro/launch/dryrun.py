@@ -357,7 +357,18 @@ def main() -> None:
                     help="recompute the probe extrapolation of existing "
                          "cells (methodology changes) without the full "
                          "compile")
+    ap.add_argument("--cache-dir", default=None, metavar="DIR",
+                    help="persistent warm-start directory (XLA compile "
+                         "cache + resolved-lane snapshot); also via "
+                         "REPRO_CACHE_DIR")
     args = ap.parse_args()
+
+    from repro.core import warmstart
+    warm = warmstart.enable_warm_start(args.cache_dir)
+    if warm["cache_dir"]:
+        print(f"warm start: cache-dir {warm['cache_dir']} "
+              f"(compile cache {'on' if warm['compile_cache'] else 'off'}, "
+              f"{warm['lanes']} lanes loaded)", flush=True)
 
     if args.pim:
         if not args.all and args.arch not in ARCHS:
@@ -388,6 +399,7 @@ def main() -> None:
                       f"{rep['efficiency']:.3f}), "
                       f"{rep['planner_queries']} queries over "
                       f"{rep['steps']} steps", flush=True)
+        warmstart.save_warm_start(args.cache_dir)
         sys.exit(0)
 
     if args.mesh not in ("pod1", "pod2", "both"):

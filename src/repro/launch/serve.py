@@ -20,6 +20,8 @@ import jax
 import numpy as np
 
 from repro.configs import ARCHS, smoke_config
+from repro.core import engine as lane_engine
+from repro.core import warmstart
 from repro.core.pimsim import PimSimulator
 from repro.models import model as M
 from repro.serving.engine import Request, ServingEngine
@@ -28,8 +30,17 @@ from repro.serving.policy import POLICIES
 from repro.serving.scenarios import SCENARIOS, make_scenario, run_scenario
 
 
-def run_scenario_mode(args, full_cfg, cfg, params, mesh=None) -> None:
+def run_scenario_mode(args, full_cfg, cfg, params, mesh=None,
+                      t_start: float | None = None) -> None:
     planner = OffloadPlanner(full_cfg, PimSimulator())
+    # Time-to-first-batch: main() entry through the first offload plan —
+    # the window that contains every cold-start cost (XLA compiles, lane
+    # resolves).  Parseable row; benchmarks/coldstart_smoke.py asserts a
+    # warm process improves it.
+    planner.plan(fence=args.fence)
+    if t_start is not None:
+        ttfb = time.perf_counter() - t_start
+        print(f"serve/time_to_first_batch,{ttfb:.3f}", flush=True)
     spec = make_scenario(args.scenario, seed=args.seed, slots=args.slots,
                          quick=args.quick)
     t0 = time.perf_counter()
@@ -74,7 +85,24 @@ def main() -> None:
                          "visible devices, e.g. XLA_FLAGS="
                          "--xla_force_host_platform_device_count=N); "
                          "default: threaded multi-device dispatch")
+    ap.add_argument("--cache-dir", default=None, metavar="DIR",
+                    help="persistent warm-start directory (XLA compile "
+                         "cache + resolved-lane snapshot); also via "
+                         "REPRO_CACHE_DIR")
+    ap.add_argument("--lane-backend", default=None,
+                    choices=["scan", "pallas", "auto"],
+                    help="lane resolver backend (default: "
+                         "REPRO_LANE_BACKEND env or scan); pallas/auto "
+                         "fall back to scan when unsupported")
     args = ap.parse_args()
+
+    t_start = time.perf_counter()
+    lane_engine.configure_lane_backend(args.lane_backend)
+    warm = warmstart.enable_warm_start(args.cache_dir)
+    if warm["cache_dir"]:
+        print(f"warm start: cache-dir {warm['cache_dir']} "
+              f"(compile cache {'on' if warm['compile_cache'] else 'off'}, "
+              f"{warm['lanes']} lanes loaded)", flush=True)
 
     full_cfg = ARCHS[args.arch]
     cfg = smoke_config(full_cfg) if args.smoke else full_cfg
@@ -90,12 +118,13 @@ def main() -> None:
         print(f"lane mesh: shard_map over {args.mesh} device(s)")
 
     if args.scenario:
-        run_scenario_mode(args, full_cfg, cfg, params, mesh=mesh)
+        run_scenario_mode(args, full_cfg, cfg, params, mesh=mesh,
+                          t_start=t_start)
+        _warm_epilogue(args)
         return
 
     # Offload plan computed against the FULL architecture (the simulator
     # works on real matrix sizes regardless of the smoke model we run).
-    from repro.core import engine as lane_engine
     lane_engine.configure_lane_mesh(mesh)
     planner = OffloadPlanner(full_cfg, PimSimulator())
     eng = ServingEngine(cfg, params, slots=args.slots, max_seq=128,
@@ -118,6 +147,18 @@ def main() -> None:
     print(f"  with LP5X-PIM offload      : {tel['mixed_ns']/1e3:10.1f} us")
     print(f"  speedup {tel['speedup']:.2f}x; offloaded "
           f"{len(tel['offloaded'])}/{tel['n_sites']} GEMV sites")
+    _warm_epilogue(args)
+
+
+def _warm_epilogue(args) -> None:
+    """Parseable lane-cache counters + snapshot save (no-op without a
+    cache dir) — the cold-start smoke asserts against these rows."""
+    info = lane_engine.lane_cache_info()
+    print(f"serve/lane_cache,hits={info['hits']},misses={info['misses']},"
+          f"size={info['size']}", flush=True)
+    saved = warmstart.save_warm_start(args.cache_dir)
+    if saved >= 0:
+        print(f"warm start: saved {saved} lanes", flush=True)
 
 
 if __name__ == "__main__":

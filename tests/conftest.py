@@ -17,6 +17,10 @@ from repro.core import engine
 def _reset_lane_backend_state():
     engine.configure_lane_devices(None)
     engine.configure_lane_mesh(None)
+    engine.configure_lane_backend(None)
+    engine.configure_scan_unroll(None)
     yield
     engine.configure_lane_devices(None)
     engine.configure_lane_mesh(None)
+    engine.configure_lane_backend(None)
+    engine.configure_scan_unroll(None)

@@ -130,6 +130,24 @@ else:                      # deterministic fallback when hypothesis absent
         assert_fleet_matches_ref(fleet_from_seed(seed))
 
 
+# ---------------------------------------------------------------------
+# Backend battery: the SAME conformance corpus through every selectable
+# lane backend — the Pallas resolver must match RefEngine lane-for-lane
+# exactly like the scan path (bit-identity is the backend contract).
+# ---------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", ["scan", "pallas"])
+@pytest.mark.parametrize("seed", range(3))
+def test_backend_fleet_matches_ref(backend, seed):
+    if backend == "pallas":
+        from repro.kernels import lane_scan
+        if not lane_scan.pallas_lane_supported():
+            pytest.skip("pallas lane resolver unsupported here")
+    with engine.lane_backend_scope(backend):
+        assert engine.resolved_lane_backend() == backend
+        assert_fleet_matches_ref(fleet_from_seed(seed))
+
+
 def test_mixed_bank_counts_share_one_dispatch():
     """8/12/16-bank design points resolve correctly in one fleet batch
     (one resolver per bank count, grouped under the hood)."""

@@ -23,8 +23,10 @@ ARCH = "mamba2-130m"
 @pytest.fixture(autouse=True)
 def fresh_lane_cache():
     engine.configure_lane_cache(4096)
+    engine.lane_cache_reset()
     yield
     engine.configure_lane_cache(4096)
+    engine.lane_cache_reset()
 
 
 def fresh_planner() -> OffloadPlanner:

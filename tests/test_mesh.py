@@ -53,8 +53,10 @@ GOLDEN = pathlib.Path(__file__).parent / "golden" / "serve_trace.json"
 @pytest.fixture(autouse=True)
 def _fresh_lane_cache():
     engine.configure_lane_cache(4096)
+    engine.lane_cache_reset()
     yield
     engine.configure_lane_cache(4096)
+    engine.lane_cache_reset()
 
 
 def _local_mesh_size() -> int:
@@ -155,7 +157,7 @@ def test_padded_lanes_are_masked(n_lanes):
              for _ in range(n_lanes)]
     keys = [("pad", n_lanes, i) for i in range(len(lanes))]
     plain = engine.resolve_lanes(lanes, keys=keys)
-    engine.configure_lane_cache(4096)        # reset counters + entries
+    engine.lane_cache_reset()                # reset counters + entries
     with engine.lane_mesh_scope(_local_mesh_size()):
         meshed = engine.resolve_lanes(lanes, keys=keys)
     info = engine.lane_cache_info()

@@ -28,8 +28,10 @@ from test_engine import build_valid_stream, random_op_tuples
 @pytest.fixture(autouse=True)
 def _fresh_lane_cache():
     engine.configure_lane_cache(4096)
+    engine.lane_cache_reset()
     yield
     engine.configure_lane_cache(4096)
+    engine.lane_cache_reset()
 
 
 def _build_both(ex, H, W, dt, fence=False, reshape=False, flush="bus",

@@ -1,0 +1,237 @@
+"""Warm-start persistence: on-disk lane LRU + cache counter semantics.
+
+The snapshot contract is replay-exactness and crash-tolerance: a saved
+lane LRU loaded into a FRESH process must reproduce ``resolve_lanes``
+results byte-identically with zero fleet resolves, and *no* corrupt,
+truncated or mismatched snapshot may ever raise — every failure mode
+degrades to a cold cache.  The ``configure_lane_cache`` counter fix
+(unchanged capacity preserves hits/misses/evictions) is pinned here too.
+"""
+import os
+import pickle
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core import engine, warmstart
+from repro.core.timing import DEFAULT_SYSTEM
+
+from test_engine import build_valid_stream, random_op_tuples
+
+
+def _lanes(seed: int, n: int = 5):
+    rng = np.random.default_rng(seed)
+    cyc = DEFAULT_SYSTEM.derive_cycles()
+    return [(cyc, build_valid_stream(random_op_tuples(rng, max_ops=30)))
+            for _ in range(n)]
+
+
+def _keys(n: int = 5):
+    return [("warm", i) for i in range(n)]
+
+
+@pytest.fixture(autouse=True)
+def _fresh_lane_cache():
+    engine.lane_cache_reset()
+    yield
+    engine.lane_cache_reset()
+
+
+# ---------------------------------------------------------------------
+# Round trip: save -> (fresh state) -> load -> replay with zero resolves
+# ---------------------------------------------------------------------
+
+def test_snapshot_round_trip_zero_misses(tmp_path):
+    lanes = _lanes(0)
+    ref = engine.resolve_lanes(lanes, keys=_keys(), need_issue=False)
+    assert warmstart.save_lane_snapshot(str(tmp_path)) == 5
+
+    engine.lane_cache_reset()                 # simulate a fresh process
+    assert warmstart.load_lane_snapshot(str(tmp_path)) == 5
+    info = engine.lane_cache_info()
+    assert info["misses"] == 0 and info["hits"] == 0   # import is silent
+
+    got = engine.resolve_lanes(lanes, keys=_keys(), need_issue=False)
+    info = engine.lane_cache_info()
+    assert info["misses"] == 0, "warm replay must not resolve"
+    assert info["hits"] == 5
+    assert [t for _, t in ref] == [t for _, t in got]
+
+
+def test_snapshot_round_trip_fresh_process(tmp_path):
+    """The real thing: a separate interpreter loads the snapshot and
+    replays byte-identically with zero fleet resolves."""
+    lanes = _lanes(7)
+    ref = engine.resolve_lanes(lanes, keys=_keys(), need_issue=False)
+    warmstart.save_lane_snapshot(str(tmp_path))
+
+    child = (
+        "import json, sys\n"
+        "sys.path.insert(0, %r)\n"
+        "import numpy as np\n"
+        "from repro.core import engine, warmstart\n"
+        "from repro.core.timing import DEFAULT_SYSTEM\n"
+        "from test_engine import build_valid_stream, random_op_tuples\n"
+        "warmstart.load_lane_snapshot(sys.argv[1])\n"
+        "rng = np.random.default_rng(7)\n"
+        "cyc = DEFAULT_SYSTEM.derive_cycles()\n"
+        "lanes = [(cyc, build_valid_stream(random_op_tuples(rng,"
+        " max_ops=30))) for _ in range(5)]\n"
+        "keys = [('warm', i) for i in range(5)]\n"
+        "res = engine.resolve_lanes(lanes, keys=keys, need_issue=False)\n"
+        "info = engine.lane_cache_info()\n"
+        "print(json.dumps(dict(totals=[int(t) for _, t in res],"
+        " misses=info['misses'])))\n"
+    ) % os.path.dirname(os.path.abspath(__file__))
+    out = subprocess.run([sys.executable, "-c", child, str(tmp_path)],
+                         capture_output=True, text=True, check=True)
+    import json
+    rep = json.loads(out.stdout.strip().splitlines()[-1])
+    assert rep["misses"] == 0
+    assert rep["totals"] == [int(t) for _, t in ref]
+
+
+def test_snapshot_save_is_atomic_and_empty_cache_saves(tmp_path):
+    assert warmstart.save_lane_snapshot(str(tmp_path)) == 0
+    assert warmstart.load_lane_snapshot(str(tmp_path)) == 0
+    leftovers = [f for f in os.listdir(tmp_path) if f.endswith(".tmp")]
+    assert not leftovers, f"tmp files left behind: {leftovers}"
+
+
+# ---------------------------------------------------------------------
+# Corruption / version tolerance: cold start, never a crash
+# ---------------------------------------------------------------------
+
+def _saved_snapshot(tmp_path):
+    engine.resolve_lanes(_lanes(1), keys=_keys(), need_issue=False)
+    warmstart.save_lane_snapshot(str(tmp_path))
+    return warmstart.lane_snapshot_path(str(tmp_path))
+
+
+def test_missing_snapshot_is_cold(tmp_path):
+    assert warmstart.load_lane_snapshot(str(tmp_path / "nowhere")) == 0
+
+
+def test_truncated_snapshot_is_cold(tmp_path):
+    path = _saved_snapshot(tmp_path)
+    data = open(path, "rb").read()
+    with open(path, "wb") as f:
+        f.write(data[: len(data) // 2])
+    engine.lane_cache_reset()
+    assert warmstart.load_lane_snapshot(str(tmp_path)) == 0
+    assert engine.lane_cache_info()["size"] == 0
+
+
+def test_garbage_snapshot_is_cold(tmp_path):
+    path = _saved_snapshot(tmp_path)
+    with open(path, "wb") as f:
+        f.write(b"not a pickle at all")
+    engine.lane_cache_reset()
+    assert warmstart.load_lane_snapshot(str(tmp_path)) == 0
+
+
+def test_version_mismatch_is_cold(tmp_path):
+    path = _saved_snapshot(tmp_path)
+    payload = pickle.load(open(path, "rb"))
+    payload["version"] = warmstart.SNAPSHOT_VERSION + 1
+    with open(path, "wb") as f:
+        pickle.dump(payload, f)
+    engine.lane_cache_reset()
+    assert warmstart.load_lane_snapshot(str(tmp_path)) == 0
+
+
+def test_fingerprint_mismatch_is_cold(tmp_path):
+    path = _saved_snapshot(tmp_path)
+    payload = pickle.load(open(path, "rb"))
+    payload["fingerprint"] = "0" * 32
+    with open(path, "wb") as f:
+        pickle.dump(payload, f)
+    engine.lane_cache_reset()
+    assert warmstart.load_lane_snapshot(str(tmp_path)) == 0
+
+
+def test_malformed_payload_shapes_are_cold(tmp_path):
+    path = warmstart.lane_snapshot_path(str(tmp_path))
+    os.makedirs(tmp_path, exist_ok=True)
+    for payload in (["a", "list"], {"magic": b"wrong"},
+                    {"magic": warmstart._MAGIC,
+                     "version": warmstart.SNAPSHOT_VERSION,
+                     "fingerprint": warmstart.snapshot_fingerprint(),
+                     "entries": "not-a-list"}):
+        with open(path, "wb") as f:
+            pickle.dump(payload, f)
+        assert warmstart.load_lane_snapshot(str(tmp_path)) == 0
+
+
+# ---------------------------------------------------------------------
+# enable/save_warm_start wiring + env knob
+# ---------------------------------------------------------------------
+
+def test_enable_warm_start_no_dir_is_noop(monkeypatch):
+    monkeypatch.delenv("REPRO_CACHE_DIR", raising=False)
+    rep = warmstart.enable_warm_start()
+    assert rep == {"cache_dir": None, "compile_cache": False, "lanes": 0}
+    assert warmstart.save_warm_start() == -1
+
+
+def test_env_cache_dir_round_trip(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_CACHE_DIR", str(tmp_path))
+    engine.resolve_lanes(_lanes(2), keys=_keys(), need_issue=False)
+    assert warmstart.save_warm_start() == 5
+    engine.lane_cache_reset()
+    rep = warmstart.enable_warm_start()
+    assert rep["cache_dir"] == str(tmp_path) and rep["lanes"] == 5
+
+
+def test_import_respects_capacity(tmp_path):
+    engine.resolve_lanes(_lanes(3), keys=_keys(), need_issue=False)
+    warmstart.save_lane_snapshot(str(tmp_path))
+    engine.configure_lane_cache(2)            # shrink (clears)
+    try:
+        kept = warmstart.load_lane_snapshot(str(tmp_path))
+        assert kept == 2                      # newest 2 survive
+        info = engine.lane_cache_info()
+        assert info["size"] == 2 and info["evictions"] == 0
+    finally:
+        engine.configure_lane_cache(4096)
+
+
+def test_import_disabled_cache_keeps_nothing(tmp_path):
+    engine.resolve_lanes(_lanes(4), keys=_keys(), need_issue=False)
+    warmstart.save_lane_snapshot(str(tmp_path))
+    engine.configure_lane_cache(0)
+    try:
+        assert warmstart.load_lane_snapshot(str(tmp_path)) == 0
+    finally:
+        engine.configure_lane_cache(4096)
+
+
+# ---------------------------------------------------------------------
+# configure_lane_cache counter semantics (satellite fix)
+# ---------------------------------------------------------------------
+
+def test_reconfigure_same_capacity_preserves_state():
+    lanes = _lanes(5)
+    engine.resolve_lanes(lanes, keys=_keys(), need_issue=False)
+    engine.resolve_lanes(lanes, keys=_keys(), need_issue=False)
+    before = engine.lane_cache_info()
+    assert before["hits"] == 5 and before["misses"] == 5
+
+    engine.configure_lane_cache(before["maxsize"])   # unchanged: no-op
+    assert engine.lane_cache_info() == before
+
+    engine.resolve_lanes(lanes, keys=_keys(), need_issue=False)
+    assert engine.lane_cache_info()["hits"] == 10    # entries survived
+
+
+def test_reconfigure_new_capacity_still_clears():
+    engine.resolve_lanes(_lanes(6), keys=_keys(), need_issue=False)
+    engine.configure_lane_cache(1024)                # change: clears
+    try:
+        info = engine.lane_cache_info()
+        assert info == dict(size=0, maxsize=1024, hits=0, misses=0,
+                            evictions=0)
+    finally:
+        engine.configure_lane_cache(4096)
