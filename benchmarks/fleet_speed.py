@@ -32,6 +32,12 @@ on/off, PIM + baseline points):
   bursty serving trace: per-step recompute vs hysteresis vs sticky on
   control cost (us/step, planner queries) with the realized/oracle
   efficiency asserted >= 0.95.
+* ``fleet/disagg_*`` — disaggregated prefill/decode serving: the
+  model-free cell-pair simulator vs the monolithic queue model
+  (us/tick, mirror parity asserted), policy efficiency over the
+  bounded SLO-mixed pair's decode occupancy (>= 0.95 asserted), the
+  peak KV-handoff depth vs its bound, and the warm-handoff lane
+  account (zero re-resolves asserted).
 
 The resolved-lane cache is cleared before every timed resolution section
 so the ``resolve``/``sweep``/``specs`` rows measure real engine work on
@@ -354,8 +360,9 @@ def main(quick: bool = False) -> dict:
     # asserts the cheap policies stay >= 0.95x of the per-step oracle —
     # the rows always track a correct control loop, same discipline as
     # the bit-exactness asserts above.
-    from repro.serving.scenarios import make_scenario, occupancy_trace, \
-        run_policy_over_trace
+    from repro.serving.scenarios import DisaggConfig, assign_slo, \
+        make_scenario, occupancy_trace, run_policy_over_trace, \
+        simulate_batches, simulate_disagg
     trace = occupancy_trace(make_scenario("bursty", seed=7, quick=quick))
     policy_reports = {}
     policy_step_us = {}
@@ -380,6 +387,60 @@ def main(quick: bool = False) -> dict:
     print(f"fleet/policy_efficiency,"
           f"{policy_reports['hysteresis']['efficiency']:.4f},"
           f"{policy_reports['sticky']['efficiency']:.4f}")
+
+    # Disaggregated serving: the model-free cell-pair simulator vs the
+    # monolithic queue model on the same bursty workload (us/tick;
+    # mirror parity asserted, so the rows always track the pinned
+    # scheduling semantics), then the policy closed loop over the
+    # bounded SLO-mixed pair's decode occupancy with the efficiency
+    # floor, the handoff bound and warm-handoff lane accounting all
+    # asserted.
+    spec_d = make_scenario("bursty", seed=7, quick=quick)
+    reps_d = 20
+    t0 = time.perf_counter()
+    for _ in range(reps_d):
+        mono_batches = simulate_batches(spec_d)
+    disagg_mono_s = (time.perf_counter() - t0) / reps_d
+    t0 = time.perf_counter()
+    for _ in range(reps_d):
+        mirror_sim = simulate_disagg(spec_d)
+    disagg_cells_s = (time.perf_counter() - t0) / reps_d
+    assert mirror_sim["per_tick_batch"] == mono_batches, \
+        "mirror cells must replay the monolithic queue model"
+    ticks = len(mono_batches)
+    print(f"fleet/disagg_sim_mono,{disagg_mono_s*1e6/ticks:.2f},"
+          f"{ticks/disagg_mono_s:.0f}")
+    print(f"fleet/disagg_sim_cells,{disagg_cells_s*1e6/ticks:.2f},"
+          f"{ticks/disagg_cells_s:.0f}")
+
+    dcfg = DisaggConfig(prefill_budget=2, handoff_bound=3,
+                        starvation_age=4)
+    dsim = simulate_disagg(spec_d, dcfg, assign_slo(spec_d, 0.6))
+    assert dsim["max_handoff_depth"] <= dcfg.handoff_bound, \
+        "KV-handoff bound overrun"
+    dec_trace = [b for b in dsim["per_tick_batch"] if b > 0]
+    disagg_eff = {}
+    for pol in ("hysteresis", "sticky"):
+        rep = run_policy_over_trace(OffloadPlanner(cfg, PimSimulator()),
+                                    pol, dec_trace).report()
+        assert rep["efficiency"] >= 0.95, (pol, rep["efficiency"])
+        disagg_eff[pol] = rep["efficiency"]
+    print(f"fleet/disagg_efficiency,{disagg_eff['hysteresis']:.4f},"
+          f"{disagg_eff['sticky']:.4f}")
+    print(f"fleet/disagg_handoff,{dsim['max_handoff_depth']},"
+          f"{dcfg.handoff_bound}")
+
+    # Warm handoff does zero lane re-resolves: once the planner's fleet
+    # query has populated the lane LRU, serving the whole disagg trace
+    # adds no misses.
+    warm_planner = OffloadPlanner(cfg, PimSimulator())
+    warm_planner.plan()
+    before_misses = engine.lane_cache_info()["misses"]
+    run_policy_over_trace(warm_planner, "hysteresis", dec_trace)
+    new_misses = engine.lane_cache_info()["misses"] - before_misses
+    assert new_misses == 0, \
+        f"warm disagg serve re-resolved {new_misses} lanes"
+    print(f"fleet/disagg_lane_resolves,{new_misses},{len(dec_trace)}")
 
     # Cold vs warm process start: same child workload twice against one
     # persistent cache dir.  The warm child must produce byte-identical
@@ -426,6 +487,11 @@ def main(quick: bool = False) -> dict:
                 policy_queries={p: r["planner_queries"]
                                 for p, r in policy_reports.items()},
                 policy_step_us=policy_step_us,
+                disagg_sim_mono_tick_us=disagg_mono_s * 1e6 / ticks,
+                disagg_sim_cells_tick_us=disagg_cells_s * 1e6 / ticks,
+                disagg_efficiency=disagg_eff,
+                disagg_max_handoff_depth=dsim["max_handoff_depth"],
+                disagg_lane_resolves=new_misses,
                 plan_batched_s=plan_vec_s,
                 sweep_batched_s=sweep_batch_s,
                 sweep_looped_s=sweep_loop_s)

@@ -267,7 +267,8 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
 
 def pim_offload_report(arch: str, batches=(1, 2, 4, 8, 16),
                        scenario: str | None = None,
-                       policy: str = "per-step") -> dict:
+                       policy: str = "per-step",
+                       disagg: bool = False) -> dict:
     """Decode-phase PIM offload telemetry across a hardware-variant grid.
 
     One ``OffloadPlanner.plan_grid`` call — i.e. a single batched engine
@@ -276,16 +277,20 @@ def pim_offload_report(arch: str, batches=(1, 2, 4, 8, 16),
     speedup curve over batch sizes.  With ``scenario`` the report also
     runs the adaptive offload controller closed-loop over that
     scenario's simulated occupancy trace (no model involved) and records
-    realized-vs-oracle policy telemetry.  Writes
-    experiments/dryrun/pim/<arch>.json.
+    realized-vs-oracle policy telemetry.  With ``disagg`` the closed
+    loop instead runs over the disaggregated cell pair's decode
+    occupancy (``simulate_disagg`` — bounded prefill/handoff, SLO-mixed
+    admission, still model-free) and the record gains the handoff/SLO
+    scheduling telemetry.  Writes experiments/dryrun/pim/<arch>.json.
     """
     import dataclasses as _dc
 
     from repro.core.timing import DEFAULT_SYSTEM, LpddrTimings, PimSpec, \
         SystemSpec
     from repro.serving.offload import OffloadPlanner
-    from repro.serving.scenarios import make_scenario, occupancy_trace, \
-        run_policy_over_trace
+    from repro.serving.scenarios import DisaggConfig, assign_slo, \
+        make_scenario, occupancy_trace, run_policy_over_trace, \
+        simulate_disagg
 
     variants = {
         "lp5x-9600": DEFAULT_SYSTEM,
@@ -313,6 +318,23 @@ def pim_offload_report(arch: str, batches=(1, 2, 4, 8, 16),
                                            occupancy_trace(sc))
         rec["serving_policy"] = dict(scenario=scenario, policy=policy,
                                      report=controller.report())
+        if disagg:
+            # The cell pair's decode occupancy under bounded prefill,
+            # a bounded KV-handoff queue and a mixed SLO population —
+            # the policy sees what the disagg decode cell would show it.
+            dcfg = DisaggConfig(prefill_budget=2, handoff_bound=3,
+                                starvation_age=4)
+            slo = assign_slo(sc, frac_latency=0.5)
+            sim = simulate_disagg(sc, dcfg, slo)
+            dec = [b for b in sim["per_tick_batch"] if b > 0]
+            dctl = run_policy_over_trace(planner, policy, dec)
+            rec["disagg"] = dict(
+                scenario=scenario, policy=policy,
+                config=dcfg.to_record(),
+                slo={str(r): s for r, s in sorted(slo.items())},
+                max_handoff_depth=sim["max_handoff_depth"],
+                decode_steps=len(dec),
+                report=dctl.report())
     out_dir = OUT_DIR / "pim"
     out_dir.mkdir(parents=True, exist_ok=True)
     (out_dir / f"{arch}.json").write_text(json.dumps(rec, indent=1))
@@ -353,6 +375,11 @@ def main() -> None:
     ap.add_argument("--policy", default="per-step",
                     choices=sorted(POLICIES),
                     help="with --pim --scenario: offload control policy")
+    ap.add_argument("--disagg", action="store_true",
+                    help="with --pim: run the closed loop over the "
+                         "disaggregated cell pair's decode occupancy "
+                         "(bounded prefill/handoff, SLO-mixed admission; "
+                         "defaults --scenario to bursty)")
     ap.add_argument("--extrap-only", action="store_true",
                     help="recompute the probe extrapolation of existing "
                          "cells (methodology changes) without the full "
@@ -373,6 +400,8 @@ def main() -> None:
     if args.pim:
         if not args.all and args.arch not in ARCHS:
             ap.error(f"--pim needs --all or --arch from {list(ARCHS)}")
+        if args.disagg and args.scenario is None:
+            args.scenario = "bursty"
         if args.mesh.isdigit():
             from repro.core import engine as lane_engine
             from repro.launch.mesh import make_lane_mesh
@@ -385,7 +414,8 @@ def main() -> None:
         archs = list(ARCHS) if args.all else [args.arch]
         for arch in archs:
             rec = pim_offload_report(arch, scenario=args.scenario,
-                                     policy=args.policy)
+                                     policy=args.policy,
+                                     disagg=args.disagg)
             base = rec["variants"]["lp5x-9600"]["decode_speedup"]["1"]
             print(f"[pim] {arch}: decode b=1 speedup "
                   f"{base['speedup']:.2f}x, "
@@ -399,9 +429,18 @@ def main() -> None:
                       f"{rep['efficiency']:.3f}), "
                       f"{rep['planner_queries']} queries over "
                       f"{rep['steps']} steps", flush=True)
+            if "disagg" in rec:
+                drep = rec["disagg"]["report"]
+                print(f"[pim] {arch}: disagg cells x {args.policy}: eff "
+                      f"{drep['efficiency']:.3f} over "
+                      f"{drep['steps']} decode steps, peak handoff "
+                      f"depth {rec['disagg']['max_handoff_depth']}",
+                      flush=True)
         warmstart.save_warm_start(args.cache_dir)
         sys.exit(0)
 
+    if args.disagg:
+        ap.error("--disagg applies to --pim runs only")
     if args.mesh not in ("pod1", "pod2", "both"):
         ap.error("--mesh must be pod1|pod2|both for cell lowering "
                  "(integer lane-mesh sizes apply to --pim only)")

@@ -10,6 +10,13 @@ a seeded workload (steady / bursty / diurnal / prefill-heavy /
 drain-refill) drives the engine end to end under an adaptive offload
 controller (``--policy per-step|hysteresis|sticky``) and the run reports
 realized vs oracle speedup, decision switches and planner queries.
+
+``--disagg`` serves through the disaggregated prefill/decode cell pair
+(``serving/cells.py``) instead of the monolithic engine — optionally
+bounded (``--prefill-budget`` / ``--handoff-bound``) and SLO-mixed
+(``--slo FRAC`` = latency-class fraction, the rest throughput class with
+``--starvation-age`` aging) — and reports the handoff-queue and
+per-class telemetry on top of the offload report.
 """
 from __future__ import annotations
 
@@ -27,7 +34,32 @@ from repro.models import model as M
 from repro.serving.engine import Request, ServingEngine
 from repro.serving.offload import OffloadPlanner
 from repro.serving.policy import POLICIES
-from repro.serving.scenarios import SCENARIOS, make_scenario, run_scenario
+from repro.serving.scenarios import (SCENARIOS, DisaggConfig, assign_slo,
+                                     make_scenario, run_scenario)
+
+
+def _disagg_config(args) -> "DisaggConfig | bool":
+    """The cell-pair config from the CLI knobs (False when not asked)."""
+    if not args.disagg:
+        if args.slo is not None:
+            raise SystemExit("--slo requires --disagg (SLO classes are "
+                             "a property of the cell pair's admission)")
+        return False
+    return DisaggConfig(prefill_budget=args.prefill_budget,
+                        handoff_bound=args.handoff_bound,
+                        starvation_age=args.starvation_age)
+
+
+def _print_disagg_report(rec: dict) -> None:
+    hand = rec["handoff"]
+    bound = hand["bound"] if hand["bound"] is not None else "unbounded"
+    print(f"  KV handoff queue     : {hand['handoffs']} handoffs, peak "
+          f"depth {hand['max_depth']} (bound {bound})")
+    for cls, per in rec["per_class"].items():
+        print(f"  SLO {cls:<11}      : {per['completed']}/"
+              f"{per['submitted']} done, mean admit wait "
+              f"{per['mean_admit_wait']:.2f} ticks, mean latency "
+              f"{per['mean_completion_ticks']:.2f} ticks")
 
 
 def run_scenario_mode(args, full_cfg, cfg, params, mesh=None,
@@ -43,14 +75,19 @@ def run_scenario_mode(args, full_cfg, cfg, params, mesh=None,
         print(f"serve/time_to_first_batch,{ttfb:.3f}", flush=True)
     spec = make_scenario(args.scenario, seed=args.seed, slots=args.slots,
                          quick=args.quick)
+    disagg = _disagg_config(args)
+    slo = (assign_slo(spec, frac_latency=args.slo)
+           if args.slo is not None else None)
     t0 = time.perf_counter()
     trace = run_scenario(spec, cfg, params, planner, policy=args.policy,
-                         fence=args.fence, mesh=mesh)
+                         fence=args.fence, mesh=mesh, disagg=disagg,
+                         slo=slo)
     dt = time.perf_counter() - t0
     rep = trace["controller"]
+    mode = "disagg cells" if disagg else "monolithic engine"
     print(f"scenario {args.scenario} (seed={args.seed}, "
-          f"{len(spec.arrivals)} requests, {args.slots} slots) under "
-          f"policy {args.policy}: {trace['tokens']} tokens in "
+          f"{len(spec.arrivals)} requests, {args.slots} slots, {mode}) "
+          f"under policy {args.policy}: {trace['tokens']} tokens in "
           f"{trace['steps']} steps ({dt:.2f}s host wall)")
     occ = ", ".join(f"{b}:{c}" for b, c in trace["occupancy"].items())
     print(f"  batch occupancy      : {occ}")
@@ -60,6 +97,8 @@ def run_scenario_mode(args, full_cfg, cfg, params, mesh=None,
     print(f"  decision switches    : {rep['switches']}; planner queries "
           f"{rep['planner_queries']}/{rep['steps']} steps; "
           f"replans {rep['replans']}")
+    if disagg:
+        _print_disagg_report(trace["disagg"])
 
 
 def main() -> None:
@@ -79,6 +118,22 @@ def main() -> None:
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--quick", action="store_true",
                     help="smaller scenario (CI smoke)")
+    ap.add_argument("--disagg", action="store_true",
+                    help="serve through the disaggregated prefill/decode "
+                         "cell pair (serving/cells.py) instead of the "
+                         "monolithic engine")
+    ap.add_argument("--slo", type=float, default=None, metavar="FRAC",
+                    help="with --disagg: fraction of requests in the "
+                         "latency SLO class (rest are throughput class)")
+    ap.add_argument("--prefill-budget", type=int, default=None,
+                    metavar="N", help="with --disagg: max prefills per "
+                    "tick (default unbounded)")
+    ap.add_argument("--handoff-bound", type=int, default=None,
+                    metavar="N", help="with --disagg: KV-handoff queue "
+                    "bound (default unbounded)")
+    ap.add_argument("--starvation-age", type=int, default=8, metavar="N",
+                    help="with --disagg: ticks after which a waiting "
+                    "throughput-class request outranks latency traffic")
     ap.add_argument("--mesh", type=int, default=None, metavar="N",
                     help="run the PIM lane resolution as one shard_map "
                          "program over an N-device 'lanes' mesh (needs N "
@@ -127,19 +182,35 @@ def main() -> None:
     # works on real matrix sizes regardless of the smoke model we run).
     lane_engine.configure_lane_mesh(mesh)
     planner = OffloadPlanner(full_cfg, PimSimulator())
-    eng = ServingEngine(cfg, params, slots=args.slots, max_seq=128,
-                        planner=planner)
+    disagg = _disagg_config(args)
+    if disagg:
+        from repro.serving.cells import DisaggServingEngine
+        from repro.serving.scenarios import SLO_LATENCY, SLO_THROUGHPUT
+        eng = DisaggServingEngine(cfg, params, slots=args.slots,
+                                  max_seq=128, disagg=disagg,
+                                  planner=planner)
+    else:
+        eng = ServingEngine(cfg, params, slots=args.slots, max_seq=128,
+                            planner=planner)
     rng = np.random.default_rng(0)
+    frac = 1.0 if args.slo is None else args.slo
     for i in range(args.requests):
-        eng.submit(Request(rid=i,
-                           prompt=rng.integers(0, cfg.vocab,
-                                               size=4 + i % 8),
-                           max_new=args.max_new))
+        req = Request(rid=i,
+                      prompt=rng.integers(0, cfg.vocab, size=4 + i % 8),
+                      max_new=args.max_new)
+        if disagg:
+            eng.submit(req, slo=(SLO_LATENCY if rng.random() < frac
+                                 else SLO_THROUGHPUT))
+        else:
+            eng.submit(req)
     t0 = time.perf_counter()
     stats = eng.run(max_steps=2000)
     dt = time.perf_counter() - t0
-    print(f"served {args.requests} requests: {stats['tokens']} tokens in "
-          f"{stats['steps']} steps ({dt:.2f}s host wall)")
+    mode = "disagg cells" if disagg else "monolithic engine"
+    print(f"served {args.requests} requests ({mode}): {stats['tokens']} "
+          f"tokens in {stats['steps']} steps ({dt:.2f}s host wall)")
+    if disagg:
+        _print_disagg_report(stats["disagg"])
     tel = stats["pim_telemetry"]
     print(f"PIM offload telemetry (arch={full_cfg.name}, "
           f"batch={tel['batch']}):")

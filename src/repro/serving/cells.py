@@ -1,0 +1,438 @@
+"""Disaggregated serving: a prefill cell and a decode cell joined by a
+KV-handoff queue.
+
+Production LLM serving splits prefill (compute-bound, long-prompt) and
+decode (memory-bound, the LP5X-PIM sweet spot) into cells with
+different batching and offload economics.  This module is that split
+for :class:`~repro.serving.engine.ServingEngine`:
+
+* :class:`PrefillCell` owns the admission queue (per-tenant SLO
+  classes, FIFO within a class, aging so throughput tenants cannot
+  starve under latency bursts) and performs prompt prefills — each
+  produces a single-row KV cache plus the first token — up to a
+  per-tick budget, pushing results onto the handoff queue.
+* :class:`KVHandoffQueue` is the bounded FIFO between the cells; the
+  prefill cell stalls rather than overrun it, and its peak depth is
+  part of every report (the fuzzed bound property).
+* :class:`DecodeCell` owns the batched KV cache and slots: handed-off
+  requests merge into free slots the moment slots free (continuous
+  batching — slot reclamation on completion, never batch-synchronous
+  refill), and every tick runs ONE batched ``decode_step`` over all
+  active slots, exactly the monolithic engine's decode loop.
+
+Each cell can carry its own :class:`OffloadController` policy and the
+pair runs under whatever lane mesh / backend is configured — both cells
+share the process-global resolved-lane LRU and warm-start caches
+(``core/engine.py`` / ``core/warmstart.py``), so a prefill→decode
+handoff never re-resolves lanes (asserted in ``tests/test_disagg.py``).
+
+Under ``DisaggConfig.mirror()`` (unbounded prefill/handoff, one SLO
+class) the pair replays the monolithic engine tick-exactly: identical
+per-request completion ticks, batch occupancy, tokens and controller
+telemetry — the differential contract ``tests/test_disagg.py`` pins
+against the golden bursty trace.  The scheduling semantics themselves
+are specified once in ``serving/scenarios.py`` (``simulate_disagg`` /
+``_admission_pick``); this module is the independent real-model
+implementation the parity battery diffs against it.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models import model as M
+from .engine import Request
+from .offload import OffloadPlanner
+from .policy import OffloadController
+from .scenarios import (DisaggConfig, SLO_CLASSES, SLO_LATENCY,
+                        SLO_THROUGHPUT)
+
+
+class AdmissionQueue:
+    """Per-SLO-class FIFO admission with aging (the anti-starvation rule).
+
+    The pick order — starved throughput requests (waited >=
+    ``starvation_age`` ticks) oldest-first, then latency FIFO, then
+    throughput FIFO — implements the same spec as
+    ``scenarios._admission_pick``; the property suite fuzzes both and
+    the cell-vs-simulator parity test holds them together.  With a
+    single class every rule degenerates to plain FIFO.
+    """
+
+    def __init__(self, starvation_age: int = 8):
+        self.starvation_age = int(starvation_age)
+        self._entries: list[tuple] = []    # (enq_tick, seq, Request, slo)
+        self._seq = 0
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def push(self, req: Request, slo: str, tick: int) -> None:
+        if slo not in SLO_CLASSES:
+            raise ValueError(f"unknown SLO class {slo!r}; "
+                             f"choose from {SLO_CLASSES}")
+        self._entries.append((tick, self._seq, req, slo))
+        self._seq += 1
+
+    def pop(self, tick: int) -> tuple[Request, str, int]:
+        """(request, slo, enqueue tick) of the next admission."""
+        starved = [i for i, (enq, _, _, slo) in enumerate(self._entries)
+                   if slo == SLO_THROUGHPUT
+                   and tick - enq >= self.starvation_age]
+        if starved:
+            pick = min(starved, key=lambda i: self._entries[i][:2])
+        else:
+            latency = [i for i, e in enumerate(self._entries)
+                       if e[3] == SLO_LATENCY]
+            pool = latency or range(len(self._entries))
+            pick = min(pool, key=lambda i: self._entries[i][:2])
+        enq, _, req, slo = self._entries.pop(pick)
+        return req, slo, enq
+
+
+@dataclasses.dataclass
+class KVHandoff:
+    """One prefilled request in flight between the cells: the request,
+    its single-row KV cache, its sequence position after prefill."""
+
+    req: Request
+    cache: object            # 1-row cache pytree from M.prefill
+    pos: int
+    slo: str
+    prefill_tick: int
+
+
+class KVHandoffQueue:
+    """Bounded FIFO of prefilled requests awaiting a decode slot."""
+
+    def __init__(self, bound: int | None = None):
+        self.bound = bound
+        self._q: list[KVHandoff] = []
+        self.handoffs = 0
+        self.max_depth = 0
+
+    def __len__(self) -> int:
+        return len(self._q)
+
+    def room(self) -> bool:
+        return self.bound is None or len(self._q) < self.bound
+
+    def push(self, item: KVHandoff) -> None:
+        if not self.room():
+            raise RuntimeError(f"KV-handoff queue overrun (bound "
+                               f"{self.bound}) — prefill cell must stall")
+        self._q.append(item)
+        self.handoffs += 1
+        self.max_depth = max(self.max_depth, len(self._q))
+
+    def pop(self) -> KVHandoff:
+        return self._q.pop(0)
+
+    def report(self) -> dict:
+        return dict(bound=self.bound, depth=len(self._q),
+                    handoffs=self.handoffs, max_depth=self.max_depth)
+
+
+class PrefillCell:
+    """Admission + prompt prefill; produces KV handoffs.
+
+    The prefill computation is byte-identical to the monolithic
+    engine's ``_prefill`` (same 1-row cache init, same ``M.prefill``
+    call, same greedy first token); only the merge into the batched
+    cache is deferred to the decode cell — which is what lets this cell
+    run ahead of slot availability.
+    """
+
+    def __init__(self, cfg: ArchConfig, params, max_seq: int,
+                 budget: int | None = None, starvation_age: int = 8,
+                 controller: Optional[OffloadController] = None):
+        self.cfg, self.params = cfg, params
+        self.max_seq = max_seq
+        self.budget = budget
+        self.queue = AdmissionQueue(starvation_age)
+        self.controller = controller
+        self.stats = dict(prefills=0, ticks=0)
+        self.prefill_ticks: dict[int, int] = {}
+        self.enq_ticks: dict[int, int] = {}
+        self.slo_of: dict[int, str] = {}
+
+    def submit(self, req: Request, slo: str, tick: int) -> None:
+        self.queue.push(req, slo, tick)
+        self.enq_ticks[req.rid] = tick
+        self.slo_of[req.rid] = slo
+
+    def _prefill(self, req: Request) -> KVHandoff:
+        s = len(req.prompt)
+        assert s < self.max_seq
+        prompt = jnp.asarray(req.prompt, jnp.int32)[None]
+        cache = M.init_cache(self.cfg, 1, self.max_seq, jnp.float32)
+        logits, cache = M.prefill(self.cfg, self.params,
+                                  {"tokens": prompt}, cache)
+        req.out.append(int(jnp.argmax(logits[0])))
+        self.stats["prefills"] += 1
+        return KVHandoff(req=req, cache=cache, pos=s, slo="", prefill_tick=0)
+
+    def tick(self, t: int, handoff: KVHandoffQueue) -> int:
+        """Prefill up to ``budget`` admitted requests while the handoff
+        queue has room; returns the number prefilled this tick."""
+        self.stats["ticks"] += 1
+        n = 0
+        while ((self.budget is None or n < self.budget)
+               and handoff.room() and len(self.queue)):
+            req, slo, _ = self.queue.pop(t)
+            item = self._prefill(req)
+            item.slo, item.prefill_tick = slo, t
+            self.prefill_ticks[req.rid] = t
+            handoff.push(item)
+            n += 1
+        if self.controller is not None and n > 0:
+            self.controller.observe(n)
+        return n
+
+    def report(self) -> dict:
+        out = dict(self.stats)
+        out["waiting"] = len(self.queue)
+        if self.controller is not None:
+            out["policy"] = self.controller.report()
+        return out
+
+
+class DecodeCell:
+    """Batched continuous-batching decode over KV-cache slots.
+
+    The decode loop is the monolithic engine's, verbatim in semantics:
+    one batched ``decode_step`` per tick over every active slot, one
+    device argmax, slots freed the instant their request completes.
+    Admission happens from the handoff queue instead of a waiting list
+    — handed-off single-row caches merge into the batched cache at the
+    lowest free slot, FIFO.
+    """
+
+    def __init__(self, cfg: ArchConfig, params, slots: int, max_seq: int,
+                 planner: Optional[OffloadPlanner] = None,
+                 controller: Optional[OffloadController] = None,
+                 step_telemetry: bool = False):
+        assert cfg.input_mode == "tokens", "cells serve token models"
+        self.cfg, self.params = cfg, params
+        self.slots = slots
+        self.max_seq = max_seq
+        self.cache = M.init_cache(cfg, slots, max_seq, jnp.float32)
+        self.active: list[Optional[Request]] = [None] * slots
+        self.pos = np.zeros(slots, dtype=np.int32)
+        self.controller = controller
+        if planner is None and controller is not None:
+            planner = controller.planner
+        self.planner = planner
+        self.stats = dict(steps=0, tokens=0)
+        self.batch_occupancy: dict[int, int] = {}
+        self.step_batches: list[int] = []
+        self.step_telemetry = step_telemetry
+        self.step_speedups: list[dict] = []
+        self.admit_ticks: dict[int, int] = {}
+        self.completions: dict[int, int] = {}
+        self._decode = jax.jit(
+            lambda p, c, t, pos: M.decode_step(cfg, p, c, t, pos))
+
+    def free_slots(self) -> int:
+        return sum(1 for r in self.active if r is None)
+
+    def admit(self, handoff: KVHandoffQueue, tick: int) -> int:
+        """Merge handed-off requests into free slots, FIFO, lowest slot
+        first — zero lane work: the merge is a pure cache write."""
+        n = 0
+        for slot in range(self.slots):
+            if self.active[slot] is None and len(handoff):
+                item = handoff.pop()
+
+                def merge(full, one):
+                    return full.at[:, slot:slot + 1].set(one)
+                self.cache = jax.tree.map(merge, self.cache, item.cache)
+                self.pos[slot] = item.pos
+                self.active[slot] = item.req
+                self.admit_ticks[item.req.rid] = tick
+                n += 1
+        return n
+
+    def step(self, tick: int) -> int:
+        """One batched decode step; returns the batch size (0 = idle)."""
+        act = [i for i, r in enumerate(self.active) if r is not None]
+        if not act:
+            return 0
+        self.batch_occupancy[len(act)] = \
+            self.batch_occupancy.get(len(act), 0) + 1
+        tokens = np.zeros((self.slots, 1), dtype=np.int32)
+        for i in act:
+            tokens[i, 0] = self.active[i].out[-1]
+        pos = jnp.asarray(self.pos, jnp.int32)
+        logits, self.cache = self._decode(self.params, self.cache,
+                                          jnp.asarray(tokens), pos)
+        next_tok = np.asarray(jnp.argmax(logits, axis=-1)).reshape(-1)
+        for i in act:
+            req = self.active[i]
+            tok = int(next_tok[i])
+            req.out.append(tok)
+            self.pos[i] += 1
+            self.stats["tokens"] += 1
+            if (tok == req.eos or len(req.out) >= req.max_new
+                    or self.pos[i] >= self.max_seq - 1):
+                req.done = True
+                self.active[i] = None
+                self.completions[req.rid] = tick
+        self.step_batches.append(len(act))
+        if self.controller is not None:
+            self.controller.observe(len(act))
+        if self.planner is not None and self.step_telemetry:
+            tel = self.planner.decode_speedup(batch=len(act))
+            self.step_speedups.append(dict(step=self.stats["steps"],
+                                           batch=len(act),
+                                           speedup=tel["speedup"]))
+        self.stats["steps"] += 1
+        return len(act)
+
+
+class DisaggServingEngine:
+    """The composed cell pair: one ``step()`` call is one driver tick.
+
+    Drop-in for :class:`ServingEngine` in the scenario driver — same
+    ``submit`` / ``step`` / ``run`` / ``summary`` surface plus
+    ``waiting`` / ``active`` / ``step_batches`` views — with the
+    disaggregated internals: per-tick the prefill cell admits and
+    prefills (SLO-aware, budgeted, handoff-bounded), the decode cell
+    reclaims freed slots from the handoff queue and runs one batched
+    decode step.
+    """
+
+    def __init__(self, cfg: ArchConfig, params, slots: int = 4,
+                 max_seq: int = 256,
+                 disagg: DisaggConfig | None = None,
+                 planner: Optional[OffloadPlanner] = None,
+                 controller: Optional[OffloadController] = None,
+                 prefill_controller: Optional[OffloadController] = None,
+                 step_telemetry: bool = False):
+        self.disagg = disagg or DisaggConfig.mirror()
+        self.handoff = KVHandoffQueue(self.disagg.handoff_bound)
+        self.prefill_cell = PrefillCell(
+            cfg, params, max_seq, budget=self.disagg.prefill_budget,
+            starvation_age=self.disagg.starvation_age,
+            controller=prefill_controller)
+        self.decode_cell = DecodeCell(cfg, params, slots, max_seq,
+                                      planner=planner,
+                                      controller=controller,
+                                      step_telemetry=step_telemetry)
+        self.ticks = 0
+
+    # -- ServingEngine-compatible views --------------------------------
+    @property
+    def active(self) -> list:
+        return self.decode_cell.active
+
+    @property
+    def waiting(self) -> int:
+        """Truthy while any request sits before its decode slot."""
+        return len(self.prefill_cell.queue) + len(self.handoff)
+
+    @property
+    def step_batches(self) -> list[int]:
+        return self.decode_cell.step_batches
+
+    @property
+    def completions(self) -> dict[int, int]:
+        return self.decode_cell.completions
+
+    @property
+    def planner(self):
+        return self.decode_cell.planner
+
+    @property
+    def controller(self):
+        return self.decode_cell.controller
+
+    def submit(self, req: Request, slo: str = SLO_LATENCY) -> None:
+        self.prefill_cell.submit(req, slo, self.ticks)
+
+    def step(self) -> bool:
+        """One tick: prefill → handoff admission → batched decode.
+        Returns True when the decode cell actually stepped."""
+        t = self.ticks
+        self.ticks += 1
+        self.prefill_cell.tick(t, self.handoff)
+        self.decode_cell.admit(self.handoff, t)
+        return self.decode_cell.step(t) > 0
+
+    def run(self, max_steps: int = 1000) -> dict:
+        while (any(self.active) or self.waiting) and max_steps > 0:
+            self.step()
+            max_steps -= 1
+        return self.summary()
+
+    # -- reporting -----------------------------------------------------
+    def request_ticks(self) -> dict:
+        """Per-request scheduling record, keyed like the model-free
+        simulator's output so the parity suite can diff them raw."""
+        return dict(prefill_ticks=dict(self.prefill_cell.prefill_ticks),
+                    admit_ticks=dict(self.decode_cell.admit_ticks),
+                    completion_ticks=dict(self.decode_cell.completions))
+
+    def _slo_summary(self) -> dict:
+        """Per-class wait/latency means — neutral (0.0) over zero
+        completions, never a divide by zero."""
+        out = {}
+        cell = self.prefill_cell
+        for cls in SLO_CLASSES:
+            rids = [r for r, s in cell.slo_of.items() if s == cls]
+            done = [r for r in rids if r in self.completions]
+            waits = [self.decode_cell.admit_ticks[r] - cell.enq_ticks[r]
+                     for r in done]
+            lats = [self.completions[r] - cell.enq_ticks[r] for r in done]
+            out[cls] = dict(
+                submitted=len(rids), completed=len(done),
+                mean_admit_wait=(sum(waits) / len(done) if done else 0.0),
+                mean_completion_ticks=(sum(lats) / len(done)
+                                       if done else 0.0))
+        return out
+
+    def summary(self) -> dict:
+        """The monolithic engine's summary shape (steps, tokens,
+        prefills, occupancy, PIM telemetry, policy report) plus the
+        disaggregation record under ``"disagg"``.  Every derived metric
+        is neutral on zero-request runs."""
+        dec = self.decode_cell
+        steps = dec.stats["steps"]
+        out = dict(steps=steps, tokens=dec.stats["tokens"],
+                   prefills=self.prefill_cell.stats["prefills"])
+        out["batch_occupancy"] = dict(dec.batch_occupancy)
+        out["completed"] = len(self.completions)
+        out["in_flight"] = (sum(r is not None for r in dec.active)
+                            + self.waiting)
+        out["tokens_per_step"] = (dec.stats["tokens"] / steps
+                                  if steps else 0.0)
+        if dec.planner is not None:
+            tel = dec.planner.decode_speedup(batch=max(1, dec.slots))
+            batches = sorted(dec.batch_occupancy) or [max(1, dec.slots)]
+            tel["per_batch_speedup"] = {
+                b: dec.planner.decode_speedup(batch=b)["speedup"]
+                for b in batches}
+            if dec.batch_occupancy:
+                tel["occupancy_weighted"] = \
+                    dec.planner.occupancy_weighted_speedup(
+                        dec.batch_occupancy)
+            if dec.step_speedups:
+                tel["per_step"] = list(dec.step_speedups)
+            out["pim_telemetry"] = tel
+        if dec.controller is not None:
+            out["policy"] = dec.controller.report()
+        out["disagg"] = dict(
+            config=self.disagg.to_record(),
+            handoff=self.handoff.report(),
+            prefill=self.prefill_cell.report(),
+            slo={str(r): s for r, s in
+                 sorted(self.prefill_cell.slo_of.items())},
+            per_class=self._slo_summary(),
+            requests={k: {str(r): t for r, t in sorted(v.items())}
+                      for k, v in self.request_ticks().items()})
+        return out

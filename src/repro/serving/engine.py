@@ -60,6 +60,13 @@ class ServingEngine:
         self.stats = dict(steps=0, tokens=0, prefills=0)
         self.batch_occupancy: dict[int, int] = {}
         self.step_batches: list[int] = []      # trace: batch per step
+        # Per-request scheduling record: driver tick of admission
+        # (= prefill, in the monolithic engine) and of completion.  The
+        # disaggregated cell pair (serving/cells.py) records the same
+        # ticks, which is what the differential parity battery diffs.
+        self.ticks = 0                         # step() calls, idle included
+        self.admit_ticks: dict[int, int] = {}
+        self.completions: dict[int, int] = {}
         # Per-step PIM telemetry: one planner query per decode step at
         # the step's true occupancy.  The first query per batch size does
         # the (lane-cache-accelerated) fleet resolve; repeats are pure
@@ -74,12 +81,13 @@ class ServingEngine:
     def submit(self, req: Request):
         self.waiting.append(req)
 
-    def _admit(self):
+    def _admit(self, tick: int):
         for slot in range(self.slots):
             if self.active[slot] is None and self.waiting:
                 req = self.waiting.pop(0)
                 self._prefill(slot, req)
                 self.active[slot] = req
+                self.admit_ticks[req.rid] = tick
 
     def _prefill(self, slot: int, req: Request):
         """Single-slot prefill into the batched cache (slot-masked)."""
@@ -101,7 +109,9 @@ class ServingEngine:
     # ------------------------------------------------------------------
     def step(self):
         """One batched decode step over all active slots."""
-        self._admit()
+        tick = self.ticks
+        self.ticks += 1          # idle ticks advance too (driver-aligned)
+        self._admit(tick)
         act = [i for i, r in enumerate(self.active) if r is not None]
         if not act:
             return False
@@ -127,6 +137,7 @@ class ServingEngine:
                     or self.pos[i] >= self.max_seq - 1):
                 req.done = True
                 self.active[i] = None
+                self.completions[req.rid] = tick
         self.step_batches.append(len(act))
         if self.controller is not None:
             self.controller.observe(len(act))
@@ -153,6 +164,14 @@ class ServingEngine:
         """
         out = dict(self.stats)
         out["batch_occupancy"] = dict(self.batch_occupancy)
+        # Derived metrics stay neutral on zero-request runs (a --quick
+        # drain-refill with a tiny step budget completes nothing): no
+        # raises, no 0/0 — completed 0, in-flight counts, rate 0.0.
+        out["completed"] = len(self.completions)
+        out["in_flight"] = (sum(r is not None for r in self.active)
+                            + len(self.waiting))
+        out["tokens_per_step"] = (self.stats["tokens"] / self.stats["steps"]
+                                  if self.stats["steps"] else 0.0)
         if self.planner is not None:
             # One batched fleet query builds the site plan; per-batch-size
             # speedups are then pure arithmetic over the cached decisions.

@@ -18,10 +18,15 @@ survive:
 completion semantics exactly (requests finish on their decode budget,
 never on EOS), so a scenario's per-tick occupancy trace is available
 *without* running a model — that is what the policy benchmarks, the
-dry-run closed loop and the property tests drive.  ``run_scenario``
-drives the real engine end to end (model decode included) and emits a
-replayable trace record; one bursty trace is pinned byte-exactly in
-``tests/golden/serve_trace.json``.
+dry-run closed loop and the property tests drive.  ``simulate_disagg``
+is the same model-free mirror for the disaggregated prefill/decode
+cell pair (``serving/cells.py``): SLO-classed admission
+(``_admission_pick`` is THE order spec), budgeted prefill, a bounded
+KV-handoff queue and continuous-batching decode.  ``run_scenario``
+drives the real engine end to end (model decode included, monolithic
+or ``disagg=``) and emits a replayable trace record; one bursty trace
+per engine shape is pinned byte-exactly in
+``tests/golden/serve_trace.json`` / ``tests/golden/disagg_trace.json``.
 """
 from __future__ import annotations
 
@@ -196,6 +201,168 @@ def occupancy_trace(spec: ScenarioSpec) -> list[int]:
     return [b for b in simulate_batches(spec) if b > 0]
 
 
+# ---------------------------------------------------------------------
+# Disaggregated prefill/decode scheduling (the cell pair's pure mirror)
+# ---------------------------------------------------------------------
+
+SLO_LATENCY = "latency"
+SLO_THROUGHPUT = "throughput"
+SLO_CLASSES = (SLO_LATENCY, SLO_THROUGHPUT)
+
+
+@dataclasses.dataclass(frozen=True)
+class DisaggConfig:
+    """Scheduling knobs of the disaggregated prefill/decode cell pair.
+
+    ``prefill_budget`` — prefills the prefill cell may perform per tick
+    (``None`` = unbounded; the mirror-of-monolithic setting).
+    ``handoff_bound`` — max prefilled requests allowed to sit in the
+    KV-handoff queue awaiting a decode slot (``None`` = unbounded);
+    the prefill cell stalls rather than overrun it.
+    ``starvation_age`` — admission aging: a throughput-class request
+    that has waited this many ticks outranks every latency-class
+    request, so sustained latency bursts cannot starve the throughput
+    class (the fuzzed no-starvation property).
+    """
+
+    prefill_budget: int | None = None
+    handoff_bound: int | None = None
+    starvation_age: int = 8
+
+    def __post_init__(self):
+        if self.prefill_budget is not None and self.prefill_budget < 1:
+            raise ValueError("prefill_budget must be >= 1 or None")
+        if self.handoff_bound is not None and self.handoff_bound < 1:
+            raise ValueError("handoff_bound must be >= 1 or None")
+        if self.starvation_age < 0:
+            raise ValueError("starvation_age must be >= 0")
+
+    @staticmethod
+    def mirror() -> "DisaggConfig":
+        """The config under which the cell pair replays the monolithic
+        engine tick-exactly: unbounded prefill and handoff, one class."""
+        return DisaggConfig()
+
+    def to_record(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @staticmethod
+    def from_record(rec: dict) -> "DisaggConfig":
+        return DisaggConfig(**rec)
+
+
+def assign_slo(spec: ScenarioSpec, frac_latency: float = 0.5,
+               seed: int | None = None) -> dict[int, str]:
+    """Seeded per-tenant SLO classes for a scenario's requests.
+
+    Deterministic in (spec.seed, seed override): the same scenario
+    always gets the same latency/throughput split, so SLO runs are as
+    replayable as the schedule itself.
+    """
+    rng = np.random.default_rng(spec.seed + 17 if seed is None else seed)
+    return {a.rid: (SLO_LATENCY if rng.random() < frac_latency
+                    else SLO_THROUGHPUT)
+            for a in spec.arrivals}
+
+
+def _admission_pick(waiting: list, t: int, starvation_age: int) -> int:
+    """Index of the next request to prefill — THE admission order spec.
+
+    ``waiting`` entries are ``(enq_tick, seq, rid, slo)``.  Starved
+    throughput requests (waited >= ``starvation_age`` ticks) outrank
+    everything, oldest first; then latency FIFO; then throughput FIFO.
+    With a single class this is plain FIFO — the mirror-of-monolithic
+    degenerate case.  ``serving/cells.py``'s ``AdmissionQueue`` is the
+    independent implementation of this same spec; the differential
+    parity suite holds them together.
+    """
+    starved = [i for i, (enq, _, _, slo) in enumerate(waiting)
+               if slo == SLO_THROUGHPUT and t - enq >= starvation_age]
+    if starved:
+        return min(starved, key=lambda i: waiting[i][:2])
+    latency = [i for i, w in enumerate(waiting) if w[3] == SLO_LATENCY]
+    pool = latency or range(len(waiting))
+    return min(pool, key=lambda i: waiting[i][:2])
+
+
+def simulate_disagg(spec: ScenarioSpec,
+                    disagg: DisaggConfig | None = None,
+                    slo: dict[int, str] | None = None,
+                    max_ticks: int = 100_000) -> dict:
+    """Tick-exact model-free mirror of the disaggregated cell pair.
+
+    The ``simulate_batches`` analogue for ``serving/cells.py``: per
+    tick, (1) arrivals join the prefill cell's admission queue, (2) the
+    prefill cell prefills up to ``prefill_budget`` requests — admission
+    order per :func:`_admission_pick` — while the KV-handoff queue has
+    room, (3) the decode cell admits handed-off requests FIFO into free
+    slots, (4) one decode step runs over every active slot, freeing
+    slots the moment their request completes (continuous batching).
+
+    Returns per-tick decode batches / prefill counts / end-of-tick
+    handoff depth plus per-request prefill/admit/completion ticks —
+    everything the property suite and the real-cell parity test diff.
+    Under ``DisaggConfig.mirror()`` with a single SLO class the decode
+    batch trace equals ``simulate_batches(spec)`` tick for tick.
+    """
+    cfg = disagg or DisaggConfig.mirror()
+    slo = slo or {}
+    pending = sorted(spec.arrivals, key=lambda a: (a.step, a.rid))
+    decode_steps = {a.rid: a.decode_steps() for a in spec.arrivals}
+    i = 0
+    waiting: list[tuple] = []          # (enq_tick, seq, rid, slo)
+    handoff: list[int] = []            # rids, FIFO
+    active = [0] * spec.slots
+    slot_rid = [-1] * spec.slots
+    batches: list[int] = []
+    prefills: list[int] = []
+    depth: list[int] = []
+    prefill_ticks: dict[int, int] = {}
+    admit_ticks: dict[int, int] = {}
+    completion_ticks: dict[int, int] = {}
+    max_depth = 0
+    seq = 0
+    t = 0
+    while i < len(pending) or waiting or handoff or any(active):
+        while i < len(pending) and pending[i].step <= t:
+            a = pending[i]
+            waiting.append((t, seq, a.rid, slo.get(a.rid, SLO_LATENCY)))
+            seq += 1
+            i += 1
+        n = 0
+        while ((cfg.prefill_budget is None or n < cfg.prefill_budget)
+               and (cfg.handoff_bound is None
+                    or len(handoff) < cfg.handoff_bound) and waiting):
+            _, _, rid, _ = waiting.pop(
+                _admission_pick(waiting, t, cfg.starvation_age))
+            prefill_ticks[rid] = t
+            handoff.append(rid)
+            max_depth = max(max_depth, len(handoff))
+            n += 1
+        prefills.append(n)
+        for s in range(spec.slots):
+            if active[s] == 0 and handoff:
+                rid = handoff.pop(0)
+                admit_ticks[rid] = t
+                active[s] = decode_steps[rid]
+                slot_rid[s] = rid
+        batches.append(sum(1 for rem in active if rem > 0))
+        for s in range(spec.slots):
+            if active[s] > 0:
+                active[s] -= 1
+                if active[s] == 0:
+                    completion_ticks[slot_rid[s]] = t
+        depth.append(len(handoff))
+        t += 1
+        if t > max_ticks:
+            raise RuntimeError(f"disagg scenario {spec.name} did not "
+                               f"drain within {max_ticks} ticks")
+    return dict(per_tick_batch=batches, per_tick_prefills=prefills,
+                handoff_depth=depth, max_handoff_depth=max_depth,
+                prefill_ticks=prefill_ticks, admit_ticks=admit_ticks,
+                completion_ticks=completion_ticks)
+
+
 def run_policy_over_trace(planner, policy, batches: Sequence[int],
                           fence: bool = True, spec=None,
                           policy_kw: dict | None = None):
@@ -221,7 +388,9 @@ def run_policy_over_trace(planner, policy, batches: Sequence[int],
 def run_scenario(scenario: ScenarioSpec, cfg, params, planner,
                  policy: str = "per-step", fence: bool = True,
                  max_seq: int | None = None,
-                 policy_kw: dict | None = None, mesh=None) -> dict:
+                 policy_kw: dict | None = None, mesh=None,
+                 disagg: "bool | DisaggConfig" = False,
+                 slo: dict[int, str] | None = None) -> dict:
     """Serve the scenario end to end (real model decode) under an
     adaptive offload controller; return the replayable trace record.
 
@@ -236,26 +405,46 @@ def run_scenario(scenario: ScenarioSpec, cfg, params, planner,
     instead of the threaded dispatch.  Because mesh resolution is
     bit-identical, the emitted trace must not change — that is the mesh
     serve cell's conformance contract (the golden replay test).
+
+    ``disagg`` — ``True`` (mirror config) or a :class:`DisaggConfig`:
+    the scenario is served by the disaggregated prefill/decode cell
+    pair (``serving/cells.py``) instead of the monolithic engine, with
+    optional per-request SLO classes in ``slo`` (rid → class, see
+    :func:`assign_slo`).  Under the mirror config with a single class
+    the emitted trace's shared keys are byte-identical to the
+    monolithic run — the disagg conformance contract — and the record
+    gains a ``"disagg"`` key (cell/handoff/SLO telemetry + the embedded
+    config, so the trace replays through the cells too).
     """
     from repro.core.engine import lane_mesh_scope
 
     with lane_mesh_scope(mesh):
         return _run_scenario(scenario, cfg, params, planner, policy,
-                             fence, max_seq, policy_kw)
+                             fence, max_seq, policy_kw, disagg, slo)
 
 
 def _run_scenario(scenario, cfg, params, planner, policy, fence,
-                  max_seq, policy_kw) -> dict:
+                  max_seq, policy_kw, disagg=False, slo=None) -> dict:
     from .engine import Request, ServingEngine
     from .policy import OffloadController
 
     controller = OffloadController(planner, policy=policy, fence=fence,
                                    **(policy_kw or {}))
     if max_seq is None:
-        max_seq = max(a.prompt_len + a.max_new for a in scenario.arrivals)
+        max_seq = max((a.prompt_len + a.max_new
+                       for a in scenario.arrivals), default=16)
         max_seq = max(64, 2 * max_seq)
-    eng = ServingEngine(cfg, params, slots=scenario.slots, max_seq=max_seq,
-                        controller=controller)
+    slo = slo or {}
+    if disagg:
+        from .cells import DisaggServingEngine
+        dcfg = disagg if isinstance(disagg, DisaggConfig) \
+            else DisaggConfig.mirror()
+        eng = DisaggServingEngine(cfg, params, slots=scenario.slots,
+                                  max_seq=max_seq, disagg=dcfg,
+                                  controller=controller)
+    else:
+        eng = ServingEngine(cfg, params, slots=scenario.slots,
+                            max_seq=max_seq, controller=controller)
     rng = np.random.default_rng(scenario.seed + 1)   # token values only
     pending = sorted(scenario.arrivals, key=lambda a: (a.step, a.rid))
     reqs = {a.rid: Request(rid=a.rid,
@@ -268,7 +457,11 @@ def _run_scenario(scenario, cfg, params, planner, policy, fence,
     per_tick: list[int] = []
     while i < len(pending) or any(eng.active) or eng.waiting:
         while i < len(pending) and pending[i].step <= t:
-            eng.submit(reqs[pending[i].rid])
+            rid = pending[i].rid
+            if disagg:
+                eng.submit(reqs[rid], slo=slo.get(rid, SLO_LATENCY))
+            else:
+                eng.submit(reqs[rid])
             i += 1
         stepped = eng.step()
         per_tick.append(eng.step_batches[-1] if stepped else 0)
@@ -277,7 +470,7 @@ def _run_scenario(scenario, cfg, params, planner, policy, fence,
             raise RuntimeError("scenario did not drain")
     stats = eng.summary()
     assert all(r.done for r in reqs.values())
-    return dict(
+    trace = dict(
         scenario=scenario.to_record(),
         policy=controller.policy.name,
         fence=fence,
@@ -289,6 +482,9 @@ def _run_scenario(scenario, cfg, params, planner, policy, fence,
         controller=controller.report(),
         per_step=[r.to_record() for r in controller.trace],
     )
+    if disagg:
+        trace["disagg"] = stats["disagg"]
+    return trace
 
 
 def replay_batches(trace: dict) -> list[int]:
@@ -305,7 +501,18 @@ def replay_trace(trace: dict, cfg, params, planner, mesh=None) -> dict:
     under any ``mesh`` build, since mesh lane execution is bit-identical
     by contract.  This is how the pinned golden trace validates a mesh
     serve cell: ``replay_trace(golden, ..., mesh=N) == golden``.
+
+    A trace recorded through the disaggregated cells carries its
+    ``DisaggConfig`` and SLO assignment under ``"disagg"`` — the replay
+    reconstructs the cell pair from the record alone, so the pinned
+    ``tests/golden/disagg_trace.json`` validates the cells the same way.
     """
+    disagg: "bool | DisaggConfig" = False
+    slo = None
+    if "disagg" in trace:
+        disagg = DisaggConfig.from_record(trace["disagg"]["config"])
+        slo = {int(r): s for r, s in trace["disagg"]["slo"].items()}
     return run_scenario(ScenarioSpec.from_record(trace["scenario"]),
                         cfg, params, planner, policy=trace["policy"],
-                        fence=trace["fence"], mesh=mesh)
+                        fence=trace["fence"], mesh=mesh,
+                        disagg=disagg, slo=slo)

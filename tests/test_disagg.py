@@ -1,0 +1,454 @@
+"""Disaggregated prefill/decode cells: the differential serving battery.
+
+The scheduling semantics of the cell pair are specified ONCE, model-free,
+in ``serving/scenarios.py`` (``simulate_disagg`` / ``_admission_pick``);
+``serving/cells.py`` is the independent real-model implementation.  This
+suite holds the two together and pins the pair against the monolithic
+engine:
+
+1. *Mirror conformance* — under ``DisaggConfig.mirror()`` the cell pair
+   replays the pinned golden bursty trace (``tests/golden/
+   serve_trace.json``) byte-identically on every shared key, across
+   ``{scan, pallas}`` lane backends and mesh sizes ``{1, 2}``, and an
+   engine-vs-cells lockstep run demands identical per-request
+   admission/completion ticks, batch occupancy and token streams.
+2. *Admission control properties* — hypothesis-fuzzed (deterministic
+   seeded corpus when hypothesis is absent): request conservation,
+   occupancy recomputable from the per-request records, FIFO within an
+   SLO class, no throughput starvation under latency bursts, the
+   KV-handoff bound and prefill budget never exceeded; plus a direct
+   ``AdmissionQueue``-vs-``_admission_pick`` pick-order diff.
+3. *Cells-vs-simulator parity* — on every scenario shape, a bounded
+   SLO-mixed cell pair (real model decode) matches ``simulate_disagg``
+   tick-exactly on batches and per-request prefill/admit/completion.
+4. *Golden disagg fixture* — one bounded SLO run's full telemetry is
+   pinned byte-exactly in ``tests/golden/disagg_trace.json``;
+   regenerate deliberately with ``python tests/test_disagg.py``.
+5. *Neutral-zero + warm handoff* — zero-request runs summarize to
+   neutral values everywhere, and a warm prefill→decode handoff does
+   zero lane re-resolves while holding >= 0.95x oracle efficiency.
+"""
+import json
+import pathlib
+
+import jax
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import HealthCheck, given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:        # collection must never hard-fail
+    HAVE_HYPOTHESIS = False
+
+from repro.configs import ARCHS, smoke_config
+from repro.core import engine
+from repro.kernels import lane_scan
+from repro.models import model as M
+from repro.serving.cells import AdmissionQueue, DisaggServingEngine
+from repro.serving.engine import Request, ServingEngine
+from repro.serving.offload import OffloadPlanner
+from repro.serving.scenarios import (SCENARIOS, SLO_CLASSES, SLO_LATENCY,
+                                     SLO_THROUGHPUT, DisaggConfig,
+                                     ScenarioSpec, _admission_pick,
+                                     assign_slo, make_scenario,
+                                     run_scenario, simulate_batches,
+                                     simulate_disagg)
+
+GOLDEN_DIR = pathlib.Path(__file__).parent / "golden"
+SERVE_GOLDEN = GOLDEN_DIR / "serve_trace.json"
+DISAGG_GOLDEN = GOLDEN_DIR / "disagg_trace.json"
+
+# Same pinned workload as the monolithic golden trace — the mirror test
+# diffs the two, so they must stay in lockstep.
+GOLDEN_SCENARIO = dict(name="bursty", seed=3, slots=4, quick=True)
+GOLDEN_POLICY = "hysteresis"
+GOLDEN_DISAGG = DisaggConfig(prefill_budget=2, handoff_bound=3,
+                             starvation_age=4)
+GOLDEN_SLO_FRAC = 0.6
+
+
+@pytest.fixture(scope="module")
+def small_lm():
+    cfg = smoke_config(ARCHS["granite-8b"])
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+@pytest.fixture(scope="module")
+def planner():
+    return OffloadPlanner(ARCHS["mamba2-130m"])
+
+
+def _nontrivial_cfg() -> DisaggConfig:
+    """Bounded + budgeted + aged: every scheduling knob active."""
+    return DisaggConfig(prefill_budget=1, handoff_bound=2,
+                        starvation_age=3)
+
+
+# ---------------------------------------------------------------------
+# 1. Mirror conformance: cells replay the golden monolithic trace
+# ---------------------------------------------------------------------
+
+@pytest.mark.parametrize("mesh_size", [1, 2])
+@pytest.mark.parametrize("backend", ["scan", "pallas"])
+def test_disagg_mirror_replays_golden_trace(small_lm, backend, mesh_size):
+    """A mirror-configured cell pair re-emits the pinned monolithic
+    bursty trace byte-identically on every shared key — per-tick
+    batches, occupancy histogram, controller report, per-step speedups —
+    under each lane backend and mesh size (lane resolution is
+    bit-identical across all of them by contract)."""
+    if backend == "pallas" and not lane_scan.pallas_lane_supported():
+        pytest.skip("pallas lane kernel unsupported here")
+    if mesh_size > len(engine.lane_devices()):
+        pytest.skip(f"mesh size {mesh_size} needs more host devices")
+    cfg, params = small_lm
+    fixture = json.loads(SERVE_GOLDEN.read_text())
+    engine.lane_cache_clear()      # force THIS combo to resolve lanes
+    fresh_planner = OffloadPlanner(ARCHS["granite-8b"])
+    with engine.lane_backend_scope(backend):
+        trace = run_scenario(make_scenario(**GOLDEN_SCENARIO), cfg,
+                             params, fresh_planner, policy=GOLDEN_POLICY,
+                             mesh=mesh_size, disagg=True)
+    trace = json.loads(json.dumps(trace))
+    assert set(trace) == set(fixture) | {"disagg"}
+    for key in fixture:
+        assert trace[key] == fixture[key], f"disagg mirror drift at {key}"
+    # the mirror run's own record: unbounded pair, pure FIFO, and every
+    # request prefills+admits+completes
+    rec = trace["disagg"]
+    assert rec["config"] == DisaggConfig.mirror().to_record()
+    n = len(fixture["scenario"]["arrivals"])
+    assert len(rec["requests"]["completion_ticks"]) == n
+
+
+def test_mirror_pair_matches_monolithic_engine_lockstep(small_lm, planner):
+    """Engine-level differential: the monolithic engine and the mirror
+    cell pair, driven tick-for-tick on one schedule, agree on admission
+    ticks, completion ticks, batch occupancy, step batches and the full
+    decoded token stream of every request."""
+    cfg, params = small_lm
+    spec = make_scenario("bursty", seed=1, slots=3, quick=True)
+    max_seq = max(64, 2 * max(a.prompt_len + a.max_new
+                              for a in spec.arrivals))
+    mono = ServingEngine(cfg, params, slots=spec.slots, max_seq=max_seq)
+    pair = DisaggServingEngine(cfg, params, slots=spec.slots,
+                               max_seq=max_seq)
+
+    def reqs():
+        rng = np.random.default_rng(spec.seed + 1)
+        return {a.rid: Request(rid=a.rid,
+                               prompt=rng.integers(0, cfg.vocab,
+                                                   size=a.prompt_len),
+                               max_new=a.max_new) for a in spec.arrivals}
+
+    reqs_mono, reqs_pair = reqs(), reqs()
+    pending = sorted(spec.arrivals, key=lambda a: (a.step, a.rid))
+    for eng, rs in ((mono, reqs_mono), (pair, reqs_pair)):
+        i, t = 0, 0
+        while i < len(pending) or any(eng.active) or eng.waiting:
+            while i < len(pending) and pending[i].step <= t:
+                eng.submit(rs[pending[i].rid])
+                i += 1
+            eng.step()
+            t += 1
+    assert mono.completions == pair.completions
+    assert mono.admit_ticks == pair.decode_cell.admit_ticks
+    assert mono.step_batches == pair.step_batches
+    assert mono.batch_occupancy == pair.decode_cell.batch_occupancy
+    for rid in reqs_mono:
+        assert reqs_mono[rid].out == reqs_pair[rid].out, rid
+    # and both match the model-free simulators
+    sim = simulate_disagg(spec)
+    assert sim["per_tick_batch"] == simulate_batches(spec)
+    assert pair.completions == sim["completion_ticks"]
+
+
+# ---------------------------------------------------------------------
+# 2. Admission control: fuzzed properties + the pick-order diff
+# ---------------------------------------------------------------------
+
+def _assert_queue_matches_spec(seed: int):
+    """Random push/pop interleavings: ``cells.AdmissionQueue`` and the
+    ``scenarios._admission_pick`` spec emit the same rid at every pop."""
+    rng = np.random.default_rng(seed)
+    age = int(rng.integers(0, 6))
+    queue = AdmissionQueue(starvation_age=age)
+    waiting: list[tuple] = []          # the spec-side mirror
+    seq = 0
+    next_rid = 0
+    for t in range(int(rng.integers(5, 25))):
+        for _ in range(int(rng.integers(0, 4))):
+            slo = (SLO_LATENCY if rng.random() < 0.5 else SLO_THROUGHPUT)
+            queue.push(Request(rid=next_rid,
+                               prompt=np.zeros(1, np.int32)), slo, t)
+            waiting.append((t, seq, next_rid, slo))
+            seq += 1
+            next_rid += 1
+        for _ in range(int(rng.integers(0, 3))):
+            if not waiting:
+                break
+            want = waiting.pop(_admission_pick(waiting, t, age))
+            req, slo, enq = queue.pop(t)
+            assert (req.rid, slo, enq) == (want[2], want[3], want[0])
+    assert len(queue) == len(waiting)
+
+
+@pytest.mark.parametrize("seed", range(10))
+def test_admission_queue_matches_pick_spec(seed):
+    _assert_queue_matches_spec(seed)
+
+
+def test_admission_queue_rejects_unknown_class():
+    q = AdmissionQueue()
+    with pytest.raises(ValueError, match="unknown SLO class"):
+        q.push(Request(rid=0, prompt=np.zeros(1, np.int32)), "batch", 0)
+
+
+def _assert_disagg_invariants(spec: ScenarioSpec, dcfg: DisaggConfig,
+                              slo: dict):
+    sim = simulate_disagg(spec, dcfg, slo)
+    rids = {a.rid for a in spec.arrivals}
+    arrive = {a.rid: a.step for a in spec.arrivals}
+    steps = {a.rid: a.decode_steps() for a in spec.arrivals}
+    pf, ad, cp = (sim["prefill_ticks"], sim["admit_ticks"],
+                  sim["completion_ticks"])
+    # conservation: every request prefills, admits and completes, in
+    # causal order, holding its slot for exactly its decode budget
+    assert set(pf) == set(ad) == set(cp) == rids
+    for r in rids:
+        assert arrive[r] <= pf[r] <= ad[r] <= cp[r], r
+        assert cp[r] - ad[r] == steps[r] - 1, r
+    # occupancy is recomputable from the per-request records and never
+    # exceeds the slot count
+    for t, b in enumerate(sim["per_tick_batch"]):
+        assert b == sum(1 for r in rids if ad[r] <= t <= cp[r])
+        assert b <= spec.slots
+    # the handoff bound and prefill budget hold at every tick
+    if dcfg.handoff_bound is not None:
+        assert sim["max_handoff_depth"] <= dcfg.handoff_bound
+        assert max(sim["handoff_depth"], default=0) <= dcfg.handoff_bound
+    if dcfg.prefill_budget is not None:
+        assert max(sim["per_tick_prefills"],
+                   default=0) <= dcfg.prefill_budget
+    assert sum(sim["per_tick_prefills"]) == len(rids)
+    # FIFO within an SLO class: enqueue order implies prefill order
+    for cls in SLO_CLASSES:
+        order = sorted((r for r in rids
+                        if slo.get(r, SLO_LATENCY) == cls),
+                       key=lambda r: (arrive[r], r))
+        ticks = [pf[r] for r in order]
+        assert ticks == sorted(ticks), cls
+    # no starvation: once a throughput request has aged past the
+    # threshold, no latency request may be prefilled before it
+    for r in rids:
+        if slo.get(r, SLO_LATENCY) != SLO_THROUGHPUT:
+            continue
+        for q in rids:
+            if slo.get(q, SLO_LATENCY) == SLO_LATENCY:
+                assert not (arrive[r] + dcfg.starvation_age
+                            <= pf[q] < pf[r]), (r, q)
+    # the mirror degenerate case equals the monolithic queue model
+    mirror = simulate_disagg(spec)
+    assert mirror["per_tick_batch"] == simulate_batches(spec)
+
+
+def _corpus_case(seed: int):
+    rng = np.random.default_rng(1000 + seed)
+    name = sorted(SCENARIOS)[seed % len(SCENARIOS)]
+    spec = make_scenario(name, seed=int(rng.integers(0, 1000)),
+                         slots=int(rng.integers(1, 6)), quick=True)
+    dcfg = DisaggConfig(
+        prefill_budget=(None if rng.random() < 0.3
+                        else int(rng.integers(1, 5))),
+        handoff_bound=(None if rng.random() < 0.3
+                       else int(rng.integers(1, 6))),
+        starvation_age=int(rng.integers(0, 10)))
+    slo = assign_slo(spec, frac_latency=float(rng.random()),
+                     seed=int(rng.integers(0, 1000)))
+    return spec, dcfg, slo
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=40, deadline=None,
+              suppress_health_check=[HealthCheck.too_slow])
+    @given(name=st.sampled_from(sorted(SCENARIOS)),
+           seed=st.integers(0, 10_000), slots=st.integers(1, 6),
+           budget=st.one_of(st.none(), st.integers(1, 4)),
+           bound=st.one_of(st.none(), st.integers(1, 5)),
+           age=st.integers(0, 10),
+           frac=st.floats(0.0, 1.0))
+    def test_fuzzed_admission_invariants(name, seed, slots, budget,
+                                         bound, age, frac):
+        spec = make_scenario(name, seed=seed, slots=slots, quick=True)
+        dcfg = DisaggConfig(prefill_budget=budget, handoff_bound=bound,
+                            starvation_age=age)
+        _assert_disagg_invariants(spec, dcfg,
+                                  assign_slo(spec, frac_latency=frac))
+else:                      # deterministic fallback when hypothesis absent
+    @pytest.mark.parametrize("seed", range(15))
+    def test_fuzzed_admission_invariants(seed):
+        _assert_disagg_invariants(*_corpus_case(seed))
+
+
+def test_disagg_config_validation():
+    with pytest.raises(ValueError, match="prefill_budget"):
+        DisaggConfig(prefill_budget=0)
+    with pytest.raises(ValueError, match="handoff_bound"):
+        DisaggConfig(handoff_bound=-1)
+    with pytest.raises(ValueError, match="starvation_age"):
+        DisaggConfig(starvation_age=-1)
+    rec = json.loads(json.dumps(_nontrivial_cfg().to_record()))
+    assert DisaggConfig.from_record(rec) == _nontrivial_cfg()
+
+
+def test_assign_slo_deterministic():
+    spec = make_scenario("steady", seed=4, quick=True)
+    assert assign_slo(spec, 0.5) == assign_slo(spec, 0.5)
+    assert set(assign_slo(spec, 0.5)) == {a.rid for a in spec.arrivals}
+    assert set(assign_slo(spec, 1.0).values()) == {SLO_LATENCY}
+    assert set(assign_slo(spec, 0.0).values()) == {SLO_THROUGHPUT}
+
+
+# ---------------------------------------------------------------------
+# 3. Cells vs simulator: every scenario shape, bounded + SLO-mixed
+# ---------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", sorted(SCENARIOS))
+def test_cells_match_simulator_on_every_scenario(small_lm, planner, name):
+    """The real cell pair (model decode included) and the model-free
+    simulator agree tick-exactly — batches, prefill/admit/completion
+    ticks, peak handoff depth — under active budget/bound/SLO knobs."""
+    cfg, params = small_lm
+    spec = make_scenario(name, seed=2, slots=3, quick=True)
+    dcfg = _nontrivial_cfg()
+    slo = assign_slo(spec, frac_latency=0.6)
+    sim = simulate_disagg(spec, dcfg, slo)
+    trace = run_scenario(spec, cfg, params, planner, policy="per-step",
+                         disagg=dcfg, slo=slo)
+    assert trace["per_tick_batch"] == sim["per_tick_batch"]
+    rec = trace["disagg"]
+    for key in ("prefill_ticks", "admit_ticks", "completion_ticks"):
+        assert rec["requests"][key] == {str(r): t for r, t
+                                        in sim[key].items()}, key
+    assert rec["handoff"]["max_depth"] == sim["max_handoff_depth"]
+    assert rec["handoff"]["handoffs"] == len(spec.arrivals)
+    assert rec["handoff"]["depth"] == 0          # drained
+    per_class = rec["per_class"]
+    for cls in SLO_CLASSES:
+        want = sum(1 for s in slo.values() if s == cls)
+        assert per_class[cls]["submitted"] == want
+        assert per_class[cls]["completed"] == want
+
+
+# ---------------------------------------------------------------------
+# 4. Golden disagg fixture
+# ---------------------------------------------------------------------
+
+def _golden_disagg_trace(small_lm) -> dict:
+    cfg, params = small_lm
+    spec = make_scenario(**GOLDEN_SCENARIO)
+    fresh_planner = OffloadPlanner(ARCHS["granite-8b"])
+    return run_scenario(spec, cfg, params, fresh_planner,
+                        policy=GOLDEN_POLICY, disagg=GOLDEN_DISAGG,
+                        slo=assign_slo(spec, GOLDEN_SLO_FRAC))
+
+
+def test_golden_disagg_trace_exact(small_lm):
+    """The bounded SLO-mixed disagg run's full telemetry — scheduling,
+    handoff, per-class waits, controller report — diffed EXACTLY against
+    the committed fixture.  Regenerate deliberately with
+    `python tests/test_disagg.py`."""
+    fixture = json.loads(DISAGG_GOLDEN.read_text())
+    current = json.loads(json.dumps(_golden_disagg_trace(small_lm)))
+    assert set(current) == set(fixture)
+    for key in fixture:
+        assert current[key] == fixture[key], f"golden drift at {key}"
+
+
+def test_golden_disagg_trace_replays_without_model():
+    """The committed disagg trace is self-describing: the embedded
+    schedule + DisaggConfig + SLO map re-derive every scheduling record
+    through the model-free simulator, and the pinned efficiency floor
+    holds."""
+    fixture = json.loads(DISAGG_GOLDEN.read_text())
+    spec = ScenarioSpec.from_record(fixture["scenario"])
+    rec = fixture["disagg"]
+    dcfg = DisaggConfig.from_record(rec["config"])
+    slo = {int(r): s for r, s in rec["slo"].items()}
+    assert dcfg == GOLDEN_DISAGG
+    assert slo == assign_slo(spec, GOLDEN_SLO_FRAC)
+    sim = simulate_disagg(spec, dcfg, slo)
+    assert fixture["per_tick_batch"] == sim["per_tick_batch"]
+    for key in ("prefill_ticks", "admit_ticks", "completion_ticks"):
+        assert rec["requests"][key] == {str(r): t for r, t
+                                        in sim[key].items()}, key
+    assert rec["handoff"]["max_depth"] == sim["max_handoff_depth"]
+    assert rec["handoff"]["max_depth"] <= dcfg.handoff_bound
+    assert fixture["controller"]["efficiency"] >= 0.95
+
+
+# ---------------------------------------------------------------------
+# 5. Neutral zero-request summaries + warm-handoff lane accounting
+# ---------------------------------------------------------------------
+
+def test_zero_request_disagg_summary_is_neutral(small_lm, planner):
+    cfg, params = small_lm
+    eng = DisaggServingEngine(cfg, params, slots=2, max_seq=32,
+                              planner=planner)
+    assert eng.step() is False
+    out = eng.run(max_steps=3)
+    assert out["steps"] == 0 and out["tokens"] == 0
+    assert out["prefills"] == 0 and out["completed"] == 0
+    assert out["in_flight"] == 0 and out["tokens_per_step"] == 0.0
+    assert out["batch_occupancy"] == {}
+    rec = out["disagg"]
+    assert rec["handoff"]["depth"] == 0
+    assert rec["handoff"]["max_depth"] == 0
+    for cls in SLO_CLASSES:
+        per = rec["per_class"][cls]
+        assert per == dict(submitted=0, completed=0, mean_admit_wait=0.0,
+                           mean_completion_ticks=0.0)
+
+
+@pytest.mark.parametrize("disagg", [False, True])
+def test_zero_request_scenario_run_is_neutral(small_lm, planner, disagg):
+    """An empty arrival schedule runs end to end — no raise, no 0/0 —
+    through both the monolithic engine and the cell pair."""
+    cfg, params = small_lm
+    spec = ScenarioSpec(name="steady", seed=0, slots=2, arrivals=())
+    trace = run_scenario(spec, cfg, params, planner,
+                         policy="hysteresis", disagg=disagg)
+    assert trace["steps"] == 0 and trace["tokens"] == 0
+    assert trace["per_tick_batch"] == []
+    assert trace["occupancy"] == {}
+    assert trace["controller"]["efficiency"] == 1.0
+
+
+def test_warm_handoff_does_zero_lane_reresolves(small_lm):
+    """Both cells share the process-global resolved-lane LRU: once the
+    planner's fleet query has warmed it, a full disaggregated serve —
+    every prefill→decode handoff included — adds zero lane-cache misses,
+    and the policy still holds the efficiency floor."""
+    cfg, params = small_lm
+    engine.lane_cache_reset()
+    warm_planner = OffloadPlanner(ARCHS["granite-8b"])
+    warm_planner.plan()                    # the one fleet resolve
+    before = engine.lane_cache_info()["misses"]
+    assert before > 0, "planner warm-up should populate the lane LRU"
+    spec = make_scenario("bursty", seed=1, slots=3, quick=True)
+    trace = run_scenario(spec, cfg, params, warm_planner,
+                         policy="hysteresis", disagg=GOLDEN_DISAGG,
+                         slo=assign_slo(spec, 0.5))
+    assert engine.lane_cache_info()["misses"] == before, \
+        "warm prefill→decode handoff must not re-resolve lanes"
+    assert trace["controller"]["efficiency"] >= 0.95
+
+
+if __name__ == "__main__":          # regenerate the committed fixture
+    cfg = smoke_config(ARCHS["granite-8b"])
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    GOLDEN_DIR.mkdir(parents=True, exist_ok=True)
+    DISAGG_GOLDEN.write_text(json.dumps(
+        _golden_disagg_trace((cfg, params)), indent=1, sort_keys=True))
+    print(f"wrote {DISAGG_GOLDEN}")

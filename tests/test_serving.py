@@ -68,6 +68,42 @@ def test_batched_decode_matches_single(small_lm):
     assert r2.out == want2, (r2.out, want2)
 
 
+def test_zero_request_summary_is_neutral(small_lm):
+    """A run that completes nothing (no submissions, or a step budget of
+    zero) summarizes to neutral values — no raise, no 0/0: completed 0,
+    in_flight counts the queue, tokens_per_step 0.0."""
+    cfg, params = small_lm
+    eng = ServingEngine(cfg, params, slots=2, max_seq=32)
+    assert eng.step() is False         # idle tick: admits nothing, no act
+    out = eng.run(max_steps=3)
+    assert out["steps"] == 0 and out["tokens"] == 0
+    assert out["prefills"] == 0 and out["completed"] == 0
+    assert out["in_flight"] == 0 and out["tokens_per_step"] == 0.0
+    assert out["batch_occupancy"] == {}
+    # queued-but-never-stepped requests count as in flight
+    eng2 = ServingEngine(cfg, params, slots=2, max_seq=32)
+    eng2.submit(Request(rid=0, prompt=np.zeros(4, np.int32), max_new=2))
+    out2 = eng2.summary()
+    assert out2["in_flight"] == 1 and out2["completed"] == 0
+    assert out2["tokens_per_step"] == 0.0
+
+
+def test_engine_records_admit_and_completion_ticks(small_lm):
+    """Tick accounting: idle ticks advance the clock, admission and
+    completion ticks land per request — the record the disaggregated
+    cell pair (serving/cells.py) is diffed against."""
+    cfg, params = small_lm
+    eng = ServingEngine(cfg, params, slots=1, max_seq=32)
+    eng.step()                                    # idle tick 0
+    eng.submit(Request(rid=7, prompt=np.arange(3, dtype=np.int32),
+                       max_new=3))
+    while any(eng.active) or eng.waiting:
+        eng.step()
+    assert eng.admit_ticks == {7: 1}
+    assert eng.completions == {7: 2}              # max(1, 3-1) decode steps
+    assert eng.ticks == 3
+
+
 def test_offload_sites_cover_arch_families():
     dense = decode_gemv_sites(ARCHS["qwen2-72b"])
     names = {s.name for s in dense}

@@ -85,8 +85,18 @@ def test_snapshot_round_trip_fresh_process(tmp_path):
         "print(json.dumps(dict(totals=[int(t) for _, t in res],"
         " misses=info['misses'])))\n"
     ) % os.path.dirname(os.path.abspath(__file__))
+    # Propagate this interpreter's import roots: the child must find
+    # `repro` even when the repo runs from a src-layout checkout without
+    # a pip install (pytest injects src/ via pyproject pythonpath, which
+    # subprocesses do not inherit).
+    src = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "src")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        [src] + ([env["PYTHONPATH"]] if env.get("PYTHONPATH") else []))
     out = subprocess.run([sys.executable, "-c", child, str(tmp_path)],
-                         capture_output=True, text=True, check=True)
+                         capture_output=True, text=True, check=True,
+                         env=env)
     import json
     rep = json.loads(out.stdout.strip().splitlines()[-1])
     assert rep["misses"] == 0
