@@ -38,6 +38,12 @@ on/off, PIM + baseline points):
   bounded SLO-mixed pair's decode occupancy (>= 0.95 asserted), the
   peak KV-handoff depth vs its bound, and the warm-handoff lane
   account (zero re-resolves asserted).
+* ``fleet/chaos_*`` — the degradation ladder on the resolve path: the
+  same prebuilt points resolved healthy, under a transient top-rung
+  fault (absorbed by bounded retry, backoff on a virtual clock — no
+  real sleeps), and under a persistent top-rung fault (ladder
+  step-down).  All three are asserted byte-identical to the looped
+  oracle: degradation moves latency, never bytes.
 
 The resolved-lane cache is cleared before every timed resolution section
 so the ``resolve``/``sweep``/``specs`` rows measure real engine work on
@@ -67,7 +73,7 @@ import time
 
 import numpy as np
 
-from repro.core import engine, warmstart
+from repro.core import engine, faults, warmstart
 from repro.core.pimsim import PimSimulator
 
 # Honour REPRO_CACHE_DIR: benchmark runs share the launchers' persistent
@@ -442,6 +448,66 @@ def main(quick: bool = False) -> dict:
         f"warm disagg serve re-resolved {new_misses} lanes"
     print(f"fleet/disagg_lane_resolves,{new_misses},{len(dec_trace)}")
 
+    # Chaos: the degradation ladder on the fleet resolve path.  The
+    # same prebuilt points resolve three ways — healthy; under a
+    # transient top-rung fault (absorbed by one bounded retry, backoff
+    # on a VirtualClock so the row never real-sleeps); and, when the
+    # ladder has a lower rung, under a persistent top-rung fault that
+    # steps the resolve down.  Every variant's totals are asserted
+    # byte-identical to the looped oracle: degradation moves latency,
+    # never bytes.
+    ladder = engine.ladder_rungs()
+    top_site = f"backend.{ladder[0]}"
+    engine.lane_cache_clear()
+    t0 = time.perf_counter()
+    chaos_healthy = engine.resolve_fleet(points)
+    chaos_healthy_s = time.perf_counter() - t0
+    for solo, fr in zip(looped, chaos_healthy):
+        np.testing.assert_array_equal(solo, fr.totals)
+
+    faults.reset()
+    inj = faults.FaultInjector()
+    inj.arm(top_site, count=1, message="benchmark transient")
+    engine.lane_cache_clear()
+    with faults.fault_scope(inj), \
+            faults.retry_scope(clock=faults.VirtualClock()):
+        t0 = time.perf_counter()
+        absorbed = engine.resolve_fleet(points)
+        chaos_absorbed_s = time.perf_counter() - t0
+    kinds = [e["kind"] for e in faults.events()]
+    assert "retry" in kinds, "transient fault was never retried"
+    assert "degrade" not in kinds, "transient fault must not step down"
+    for solo, fr in zip(looped, absorbed):
+        np.testing.assert_array_equal(solo, fr.totals)
+
+    chaos_degraded_s = None
+    if len(ladder) > 1:
+        faults.reset()
+        inj = faults.FaultInjector()
+        inj.arm(top_site, count=-1, message="benchmark persistent")
+        engine.lane_cache_clear()
+        with faults.fault_scope(inj), \
+                faults.retry_scope(clock=faults.VirtualClock()):
+            t0 = time.perf_counter()
+            degraded = engine.resolve_fleet(points)
+            chaos_degraded_s = time.perf_counter() - t0
+        n_degrades = sum(1 for e in faults.events()
+                         if e["kind"] == "degrade")
+        assert n_degrades >= 1, "persistent fault never stepped down"
+        for solo, fr in zip(looped, degraded):
+            np.testing.assert_array_equal(solo, fr.totals)
+    faults.reset()
+
+    print(f"fleet/chaos_healthy,{chaos_healthy_s*1e6/n:.1f},"
+          f"{n/chaos_healthy_s:.1f}")
+    print(f"fleet/chaos_absorbed,{chaos_absorbed_s*1e6/n:.1f},"
+          f"{chaos_absorbed_s/chaos_healthy_s:.2f}")
+    if chaos_degraded_s is not None:
+        print(f"fleet/chaos_degraded,{chaos_degraded_s*1e6/n:.1f},"
+              f"{chaos_degraded_s/chaos_healthy_s:.2f}")
+    else:
+        print("fleet/chaos_degraded,terminal_rung_only,1.00")
+
     # Cold vs warm process start: same child workload twice against one
     # persistent cache dir.  The warm child must produce byte-identical
     # totals with zero lane-cache misses (every lane replayed from the
@@ -492,6 +558,11 @@ def main(quick: bool = False) -> dict:
                 disagg_efficiency=disagg_eff,
                 disagg_max_handoff_depth=dsim["max_handoff_depth"],
                 disagg_lane_resolves=new_misses,
+                chaos_ladder=ladder,
+                chaos_absorbed_overhead=chaos_absorbed_s / chaos_healthy_s,
+                chaos_degraded_overhead=(
+                    chaos_degraded_s / chaos_healthy_s
+                    if chaos_degraded_s is not None else None),
                 plan_batched_s=plan_vec_s,
                 sweep_batched_s=sweep_batch_s,
                 sweep_looped_s=sweep_loop_s)

@@ -39,6 +39,7 @@ except ImportError:                    # jax 0.4.x/0.5.x
 from jax.sharding import Mesh, NamedSharding, PartitionSpec
 
 from . import commands as C
+from . import faults
 from .timing import TimingCycles
 
 NEG = -(1 << 30)
@@ -417,8 +418,15 @@ def compile_cache_size() -> int:
 # kernel is supported on this backend, scan otherwise — and an explicit
 # "pallas" request ALSO falls back to scan when unsupported (capability-
 # detected fallback; the parity suites pin bit-identity between the two).
-# A configured lane mesh takes precedence: shard_map slabs stay on the
-# scan family regardless of the backend setting.
+#
+# Execution follows the DEGRADATION LADDER pallas → mesh → threaded →
+# single-device scan (see _ladder_rungs): a run starts on the highest
+# configured rung and, on failure — a kernel raise, a mesh shard loss, an
+# injected chaos fault — steps down after bounded retries, with a circuit
+# breaker (faults.backend_breaker) skipping rungs that have failed K
+# consecutive resolves.  Because every rung is bit-identical by contract,
+# a degraded resolve returns byte-exact results; every step-down is
+# recorded as a structured event (core/faults.py).
 # ---------------------------------------------------------------------------
 
 _LANE_BACKENDS = ("scan", "pallas", "auto")
@@ -535,12 +543,32 @@ class FleetResult:
 # cache stays memory-light (totals are what the sweep/serving layers use).
 # ---------------------------------------------------------------------------
 
-_LANE_CACHE: "OrderedDict[tuple, tuple[int, np.ndarray | None]]" = \
+# Entries are (total, issue | None, integrity tag): the tag is a cheap
+# constant-time checksum verified on every hit, so a poisoned entry —
+# bit-flipped totals, truncated issue arrays — is detected and the lane
+# falls back to a cold resolve instead of serving stale timing.
+_LANE_CACHE: "OrderedDict[tuple, tuple[int, np.ndarray | None, int]]" = \
     OrderedDict()
 _LANE_CACHE_LOCK = threading.Lock()
 _LANE_CACHE_MAX = 4096
 _LANE_ISSUE_BYTES = 1 << 16
 _LANE_STATS = {"hits": 0, "misses": 0, "evictions": 0}
+
+
+def _lane_tag(total: int, issue: np.ndarray | None) -> int:
+    """Constant-time integrity tag over a cache entry.
+
+    Deliberately not cryptographic — it runs on the hit fast path, so it
+    mixes the total with the issue array's endpoints and size instead of
+    hashing the full buffer.  That catches the realistic poison modes
+    (flipped totals, truncation, swapped arrays); byte-level interior
+    corruption of a cached issue array is out of scope.
+    """
+    h = (int(total) * 0x9E3779B1) & 0xFFFFFFFF
+    if issue is not None and issue.size:
+        h ^= (int(issue[0]) * 31 + int(issue[-1]) * 17
+              + int(issue.size)) & 0xFFFFFFFF
+    return h
 
 
 def configure_lane_cache(maxsize: int) -> None:
@@ -603,7 +631,7 @@ def lane_cache_export() -> list[tuple]:
     """
     with _LANE_CACHE_LOCK:
         return [(k, total, issue)
-                for k, (total, issue) in _LANE_CACHE.items()]
+                for k, (total, issue, _tag) in _LANE_CACHE.items()]
 
 
 def lane_cache_import(entries: Iterable[tuple]) -> int:
@@ -622,7 +650,8 @@ def lane_cache_import(entries: Iterable[tuple]) -> int:
             if issue is not None:
                 issue = np.asarray(issue)
                 issue.setflags(write=False)
-            _LANE_CACHE[key] = (int(total), issue)
+            total = int(total)
+            _LANE_CACHE[key] = (total, issue, _lane_tag(total, issue))
             _LANE_CACHE.move_to_end(key)
             n += 1
         while len(_LANE_CACHE) > _LANE_CACHE_MAX:
@@ -639,9 +668,18 @@ def _lane_cache_get(key, need_issue: bool):
         if ent is None or (need_issue and ent[1] is None):
             _LANE_STATS["misses"] += 1
             return None
+        total, issue, tag = ent
+        if tag != _lane_tag(total, issue):
+            # Poisoned entry: evict and fall back cold — never serve a
+            # stale lane.  Counted as a miss (the caller re-resolves).
+            del _LANE_CACHE[key]
+            _LANE_STATS["misses"] += 1
+            faults.record_event("lane_cache", "detect",
+                                "poisoned entry evicted (tag mismatch)")
+            return None
         _LANE_CACHE.move_to_end(key)
         _LANE_STATS["hits"] += 1
-        return ent
+        return (total, issue)
 
 
 def _lane_cache_put(key, total: int, issue: np.ndarray | None) -> None:
@@ -653,11 +691,49 @@ def _lane_cache_put(key, total: int, issue: np.ndarray | None) -> None:
         prev = _LANE_CACHE.get(key)
         if issue is None and prev is not None:
             issue = prev[1]          # never downgrade a cached issue array
-        _LANE_CACHE[key] = (total, issue)
+        _LANE_CACHE[key] = (total, issue, _lane_tag(total, issue))
         _LANE_CACHE.move_to_end(key)
         while len(_LANE_CACHE) > _LANE_CACHE_MAX:
             _LANE_CACHE.popitem(last=False)
             _LANE_STATS["evictions"] += 1
+
+
+def lane_cache_poison(n: int = 1, seed: int = 0) -> int:
+    """Chaos hook: corrupt the totals of up to ``n`` cached entries in
+    place (stale tags, so the integrity check catches them on the next
+    hit or :func:`lane_cache_verify` sweep).  Returns entries poisoned.
+    """
+    rng = np.random.default_rng(seed)
+    with _LANE_CACHE_LOCK:
+        keys = list(_LANE_CACHE)
+        if not keys:
+            return 0
+        picks = rng.choice(len(keys), size=min(int(n), len(keys)),
+                           replace=False)
+        for i in picks:
+            total, issue, tag = _LANE_CACHE[keys[i]]
+            _LANE_CACHE[keys[i]] = (total + 1 + int(rng.integers(1000)),
+                                    issue, tag)
+        return len(picks)
+
+
+def lane_cache_verify() -> int:
+    """Integrity sweep: evict every poisoned entry (tag mismatch),
+    recording one ``detect`` event each; returns the eviction count.
+
+    The scrub analogue of the per-hit check in ``_lane_cache_get`` —
+    chaos timelines schedule it so detection is deterministic even for
+    entries no request touches again.
+    """
+    with _LANE_CACHE_LOCK:
+        bad = [k for k, (total, issue, tag) in _LANE_CACHE.items()
+               if tag != _lane_tag(total, issue)]
+        for k in bad:
+            del _LANE_CACHE[k]
+    for _ in bad:
+        faults.record_event("lane_cache", "detect",
+                            "poisoned entry evicted (scrub)")
+    return len(bad)
 
 
 # ---------------------------------------------------------------------------
@@ -792,6 +868,36 @@ def _give_slab(buf: np.ndarray) -> None:
             spares.append(buf)
 
 
+def _ladder_rungs() -> list[str]:
+    """The degradation ladder for this process configuration, highest
+    rung first: pallas → mesh → threaded → single-device scan.
+
+    Only configured rungs appear — "pallas" when the resolved backend is
+    the Pallas kernel, "mesh" when a lane mesh is configured, "threaded"
+    when more than one device is visible — and "scan" is always the
+    terminal rung (a single-device vmapped lax.scan needs nothing but
+    the default device).  Execution starts on the first rung whose
+    breaker is closed and steps down on failure; since every rung is
+    bit-identical by contract, where a resolve lands never changes its
+    bytes.
+    """
+    rungs = []
+    if resolved_lane_backend() == "pallas":
+        rungs.append("pallas")
+    if lane_mesh() is not None:
+        rungs.append("mesh")
+    if len(lane_devices()) > 1:
+        rungs.append("threaded")
+    rungs.append("scan")
+    return rungs
+
+
+def ladder_rungs() -> list[str]:
+    """Public view of the active degradation ladder (highest first) —
+    what the chaos harness arms fault schedules against."""
+    return _ladder_rungs()
+
+
 def resolve_lanes(
     lanes: Sequence[tuple[TimingCycles, np.ndarray]],
     keys: Sequence[Hashable | None] | None = None,
@@ -808,14 +914,18 @@ def resolve_lanes(
     in input order; issue arrays are read-only (deduplicated lanes and
     the resolved-lane LRU share them).
 
-    Backend: with a lane mesh configured (:func:`configure_lane_mesh`)
-    each slab runs as ONE ``shard_map`` program over the mesh's
-    ``lanes`` axis (bit-identical by contract — tests/test_mesh.py);
-    otherwise slabs are thread-dispatched across ``lane_devices()``,
-    each slab executing on the selected resolver backend
-    (:func:`configure_lane_backend`): the vmapped scan, or the Pallas
-    lane kernel — bit-identical by contract (tests/test_pallas_resolver
-    and the conformance battery run both).
+    Backend: execution walks the degradation ladder pallas → mesh →
+    threaded → single-device scan (:func:`_ladder_rungs`), starting on
+    the highest configured rung — the Pallas kernel when the resolved
+    backend is "pallas" (:func:`configure_lane_backend`), else ONE
+    ``shard_map`` program per slab over a configured lane mesh
+    (:func:`configure_lane_mesh`), else thread-dispatched slabs across
+    ``lane_devices()``.  A rung that raises (kernel fault, shard loss,
+    injected chaos) is retried with backoff and then stepped past, its
+    breaker counting toward a trip; every rung is bit-identical by
+    contract (tests/test_mesh.py, tests/test_pallas_resolver and the
+    conformance battery), so a degraded resolve returns byte-exact
+    results.
 
     ``keys`` — optional per-lane *structural* identity: a hashable value
     the planner guarantees to determine the stream bytes (equal key ==
@@ -886,11 +996,14 @@ def resolve_lanes(
         groups.setdefault((cyc.num_banks, _length_bucket(s.shape[0])),
                           []).append(u)
 
+    done: dict[int, bool] = {u: False for u in todo}
+
     def _store(chunk: list[int], iss, tot) -> None:
         """Write one slab's rows (true lengths) into the result arrays
-        and the lane LRU — shared by the threaded and mesh paths, and
-        the reason padded tail rows never contribute: only ``chunk``
-        rows are ever read back."""
+        and the lane LRU — shared by every ladder rung, and the reason
+        padded tail rows never contribute: only ``chunk`` rows are ever
+        read back.  Marks the reps done so a rung failing mid-way hands
+        only the unfinished remainder to the next rung."""
         for row, u in enumerate(chunk):
             if need_issue:
                 # copy: a view would pin the whole padded slab;
@@ -903,17 +1016,22 @@ def resolve_lanes(
                 totals[v] = tot[row]
                 issues[v] = issues[u]
                 _lane_cache_put(uniq[v][2], int(tot[row]), issues[u])
+            done[u] = True
 
-    mesh = lane_mesh()
-    if mesh is not None:
-        # Mesh path: every (banks, length-bucket) group runs as ONE
+    def _pending_groups() -> dict[tuple[int, int], list[int]]:
+        return {gk: left for gk, idxs in sorted(groups.items())
+                if (left := [u for u in idxs if not done[u]])}
+
+    def _run_mesh() -> None:
+        # Mesh rung: every (banks, length-bucket) group runs as ONE
         # shard_map program per <=(128 x mesh) slab — the fleet axis is
         # sharded over the ``lanes`` mesh axis, the width is padded so
         # each shard gets the same power-of-two bucket, and tail rows
         # (config of lane 0, all-NOP streams) are masked by _store.
+        mesh = lane_mesh()
         sharding = NamedSharding(mesh, PartitionSpec(mesh.axis_names[0]))
         m = mesh.size
-        for (nb, length), idxs in sorted(groups.items()):
+        for (nb, length), idxs in _pending_groups().items():
             for lo in range(0, len(idxs), _MAX_WIDTH * m):
                 chunk = idxs[lo:lo + _MAX_WIDTH * m]
                 width = _mesh_width(len(chunk), m)
@@ -929,79 +1047,117 @@ def resolve_lanes(
                 tot = np.asarray(tot)
                 _store(chunk, np.asarray(iss) if need_issue else None, tot)
                 _give_slab(buf)
-        return [(issues[lane_of[i]], int(totals[lane_of[i]]))
-                for i in range(len(lane_of))]
 
-    # Chunk each group into <=128-lane slabs, then greedily balance the
-    # slabs across devices by padded step count (width x length).  The
-    # per-slab executable is the selected backend's (scan vs Pallas);
-    # everything around it — dedupe, LRU, pooling, dispatch — is shared.
-    resolver = (_pallas_resolver if resolved_lane_backend() == "pallas"
-                else _fleet_resolver)
-    slabs: list[tuple[int, list[int], int, int]] = []
-    for (nb, length), idxs in sorted(groups.items()):
-        for lo in range(0, len(idxs), _MAX_WIDTH):
-            chunk = idxs[lo:lo + _MAX_WIDTH]
-            slabs.append((nb, chunk, _fleet_bucket(len(chunk)), length))
-    devs = lane_devices()
-    loads = [0] * len(devs)
-    assignment = [0] * len(slabs)
-    for i in sorted(range(len(slabs)),
-                    key=lambda j: -(slabs[j][2] * slabs[j][3])):
-        d = loads.index(min(loads))
-        assignment[i] = d
-        loads[d] += slabs[i][2] * slabs[i][3]
+    def _run_sharded(resolver, devs) -> None:
+        # Chunk each group into <=128-lane slabs, then greedily balance
+        # the slabs across devices by padded step count (width x
+        # length).  The per-slab executable is the rung's (scan vs
+        # Pallas); everything around it — dedupe, LRU, pooling,
+        # dispatch — is shared.  With one device this degenerates to
+        # the single-device scan (no worker threads).
+        slabs: list[tuple[int, list[int], int, int]] = []
+        for (nb, length), idxs in _pending_groups().items():
+            for lo in range(0, len(idxs), _MAX_WIDTH):
+                chunk = idxs[lo:lo + _MAX_WIDTH]
+                slabs.append((nb, chunk, _fleet_bucket(len(chunk)),
+                              length))
+        loads = [0] * len(devs)
+        assignment = [0] * len(slabs)
+        for i in sorted(range(len(slabs)),
+                        key=lambda j: -(slabs[j][2] * slabs[j][3])):
+            d = loads.index(min(loads))
+            assignment[i] = d
+            loads[d] += slabs[i][2] * slabs[i][3]
 
-    # Pack + place in the main thread (the pooled host buffer is free for
-    # reuse once device_put has copied it); execute per device in worker
-    # threads — jit execution releases the GIL, so devices overlap.
-    borrowed: list[np.ndarray] = []
-    per_dev: list[list] = [[] for _ in devs]
-    for i, (nb, chunk, width, length) in enumerate(slabs):
-        buf = _take_slab(width, length)
-        for row, u in enumerate(chunk):
-            s = uniq[u][1]
-            buf[row, : s.shape[0]] = s
-        cycs = [uniq[u][0] for u in chunk]
-        cycs += [cycs[0]] * (width - len(chunk))
-        dev = devs[assignment[i]]
-        placed = (jax.device_put(stack_cycles(cycs), dev),
-                  jax.device_put(buf, dev))
-        borrowed.append(buf)
-        per_dev[assignment[i]].append((nb, chunk, placed))
+        # Pack + place in the main thread (the pooled host buffer is
+        # free for reuse once device_put has copied it); execute per
+        # device in worker threads — jit execution releases the GIL, so
+        # devices overlap.
+        borrowed: list[np.ndarray] = []
+        per_dev: list[list] = [[] for _ in devs]
+        for i, (nb, chunk, width, length) in enumerate(slabs):
+            buf = _take_slab(width, length)
+            for row, u in enumerate(chunk):
+                s = uniq[u][1]
+                buf[row, : s.shape[0]] = s
+            cycs = [uniq[u][0] for u in chunk]
+            cycs += [cycs[0]] * (width - len(chunk))
+            dev = devs[assignment[i]]
+            placed = (jax.device_put(stack_cycles(cycs), dev),
+                      jax.device_put(buf, dev))
+            borrowed.append(buf)
+            per_dev[assignment[i]].append((nb, chunk, placed))
 
-    def _run_dev(jobs) -> None:
-        for nb, chunk, (cycs, batch) in jobs:
-            iss, tot = resolver(nb)(cycs, batch)
-            tot = np.asarray(tot)
-            _store(chunk, np.asarray(iss) if need_issue else None, tot)
+        def _run_dev(jobs) -> None:
+            for nb, chunk, (cycs, batch) in jobs:
+                iss, tot = resolver(nb)(cycs, batch)
+                tot = np.asarray(tot)
+                _store(chunk, np.asarray(iss) if need_issue else None,
+                       tot)
 
-    active = [jobs for jobs in per_dev if jobs]
-    if len(active) <= 1:
-        for jobs in active:
-            _run_dev(jobs)
-    else:
-        errors: list[BaseException] = []
-
-        def _worker(jobs) -> None:
-            try:
+        act = [jobs for jobs in per_dev if jobs]
+        if len(act) <= 1:
+            for jobs in act:
                 _run_dev(jobs)
-            except BaseException as e:      # re-raised below
-                errors.append(e)
+        else:
+            errors: list[BaseException] = []
 
-        workers = [threading.Thread(target=_worker, args=(jobs,))
-                   for jobs in active[1:]]
-        for w in workers:
-            w.start()
-        try:
-            _run_dev(active[0])
-        finally:
+            def _worker(jobs) -> None:
+                try:
+                    _run_dev(jobs)
+                except BaseException as e:      # re-raised below
+                    errors.append(e)
+
+            workers = [threading.Thread(target=_worker, args=(jobs,))
+                       for jobs in act[1:]]
             for w in workers:
-                w.join()
-        if errors:
-            raise errors[0]
-    for buf in borrowed:
-        _give_slab(buf)
+                w.start()
+            try:
+                _run_dev(act[0])
+            finally:
+                for w in workers:
+                    w.join()
+            if errors:
+                raise errors[0]
+        for buf in borrowed:
+            _give_slab(buf)
+
+    def _run_rung(rung: str) -> None:
+        if rung == "mesh":
+            _run_mesh()
+        elif rung == "pallas":
+            _run_sharded(_pallas_resolver, lane_devices())
+        elif rung == "threaded":
+            _run_sharded(_fleet_resolver, lane_devices())
+        else:                                   # single-device scan
+            _run_sharded(_fleet_resolver, lane_devices()[:1])
+
+    # Walk the degradation ladder: start on the highest closed rung,
+    # absorb transient faults with bounded retries, step down on
+    # persistent failure (counting it toward the rung's breaker).  The
+    # terminal scan rung is never skipped; if IT fails after retries the
+    # error propagates — there is nothing below.
+    if todo:
+        breaker = faults.backend_breaker()
+        rungs = _ladder_rungs()
+        for i, rung in enumerate(rungs):
+            site = "backend." + rung
+            terminal = i == len(rungs) - 1
+            if not terminal and breaker.tripped(site):
+                faults.record_event(site, "skip", "circuit open")
+                continue
+            try:
+                faults.retry_call(lambda: _run_rung(rung), site)
+                breaker.record_success(site)
+                break
+            except Exception as e:  # noqa: BLE001 - ladder absorbs it
+                breaker.record_failure(site)
+                if terminal:
+                    raise
+                faults.record_event(
+                    site, "degrade",
+                    f"stepping down to backend.{rungs[i + 1]}: "
+                    f"{type(e).__name__}: {e}")
 
     return [(issues[lane_of[i]], int(totals[lane_of[i]]))
             for i in range(len(lane_of))]

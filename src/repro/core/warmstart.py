@@ -37,6 +37,7 @@ import tempfile
 
 from . import commands as C
 from . import engine
+from . import faults
 from .timing import TimingCycles
 
 SNAPSHOT_VERSION = 1
@@ -98,6 +99,9 @@ def save_lane_snapshot(cache_dir: str) -> int:
     try:
         with os.fdopen(fd, "wb") as f:
             pickle.dump(payload, f, protocol=pickle.HIGHEST_PROTOCOL)
+            f.flush()
+            os.fsync(f.fileno())
+        faults.maybe_fail("warmstart")   # crash-mid-write injection seam
         os.replace(tmp, path)
     except BaseException:
         try:
@@ -117,23 +121,35 @@ def load_lane_snapshot(cache_dir: str) -> int:
     raises.
     """
     path = lane_snapshot_path(cache_dir)
+    if not os.path.exists(path):
+        return 0
     try:
+        faults.maybe_fail("warmstart")   # corrupt-read injection seam
         with open(path, "rb") as f:
             payload = pickle.load(f)
-        if not isinstance(payload, dict):
-            return 0
-        if payload.get("magic") != _MAGIC:
-            return 0
-        if payload.get("version") != SNAPSHOT_VERSION:
-            return 0
-        if payload.get("fingerprint") != snapshot_fingerprint():
-            return 0
-        entries = payload.get("entries")
-        if not isinstance(entries, list):
-            return 0
-        return engine.lane_cache_import(entries)
-    except Exception:      # noqa: BLE001 - cold start beats a crash
-        return 0
+        reason = _reject_reason(payload)
+        if reason is None:
+            return engine.lane_cache_import(payload["entries"])
+    except Exception as e:  # noqa: BLE001 - cold start beats a crash
+        reason = f"{type(e).__name__}: {e}"
+    faults.record_event("warmstart", "detect",
+                        f"snapshot rejected, cold start: {reason}")
+    return 0
+
+
+def _reject_reason(payload) -> str | None:
+    """Why a decoded snapshot payload is unusable (None = valid)."""
+    if not isinstance(payload, dict):
+        return f"payload is {type(payload).__name__}, not dict"
+    if payload.get("magic") != _MAGIC:
+        return "bad magic"
+    if payload.get("version") != SNAPSHOT_VERSION:
+        return f"version {payload.get('version')!r} != {SNAPSHOT_VERSION}"
+    if payload.get("fingerprint") != snapshot_fingerprint():
+        return "engine fingerprint mismatch"
+    if not isinstance(payload.get("entries"), list):
+        return "entries is not a list"
+    return None
 
 
 # ---------------------------------------------------------------------------
@@ -199,4 +215,12 @@ def save_warm_start(cache_dir: str | None = None) -> int:
     cache_dir = cache_dir or cache_dir_from_env()
     if not cache_dir:
         return -1
-    return save_lane_snapshot(cache_dir)
+    try:
+        return save_lane_snapshot(cache_dir)
+    except Exception as e:  # noqa: BLE001 - persistence is advisory
+        # A failed save must never take the serve epilogue down with
+        # it; the previous snapshot (if any) is still in place.
+        faults.record_event("warmstart", "fault",
+                            f"snapshot save failed: "
+                            f"{type(e).__name__}: {e}")
+        return -1

@@ -13,10 +13,18 @@ realized vs oracle speedup, decision switches and planner queries.
 
 ``--disagg`` serves through the disaggregated prefill/decode cell pair
 (``serving/cells.py``) instead of the monolithic engine — optionally
-bounded (``--prefill-budget`` / ``--handoff-bound``) and SLO-mixed
-(``--slo FRAC`` = latency-class fraction, the rest throughput class with
-``--starvation-age`` aging) — and reports the handoff-queue and
-per-class telemetry on top of the offload report.
+bounded (``--prefill-budget`` / ``--handoff-bound`` /
+``--admission-capacity``) and SLO-mixed (``--slo FRAC`` = latency-class
+fraction, the rest throughput class with ``--starvation-age`` aging) —
+and reports the handoff-queue and per-class telemetry on top of the
+offload report.
+
+``--chaos`` runs the scenario under a seeded fault timeline
+(``serving/chaos.py``, seed via ``--faults``): injected backend
+failures, lane-cache poison/eviction storms, planner timeouts and
+handoff pressure, absorbed by the degradation ladder.  The run must
+complete with zero unhandled exceptions — results stay byte-exact by
+the backend contract — and the report includes the incident record.
 """
 from __future__ import annotations
 
@@ -47,7 +55,8 @@ def _disagg_config(args) -> "DisaggConfig | bool":
         return False
     return DisaggConfig(prefill_budget=args.prefill_budget,
                         handoff_bound=args.handoff_bound,
-                        starvation_age=args.starvation_age)
+                        starvation_age=args.starvation_age,
+                        admission_capacity=args.admission_capacity)
 
 
 def _print_disagg_report(rec: dict) -> None:
@@ -79,9 +88,16 @@ def run_scenario_mode(args, full_cfg, cfg, params, mesh=None,
     slo = (assign_slo(spec, frac_latency=args.slo)
            if args.slo is not None else None)
     t0 = time.perf_counter()
-    trace = run_scenario(spec, cfg, params, planner, policy=args.policy,
-                         fence=args.fence, mesh=mesh, disagg=disagg,
-                         slo=slo)
+    if args.chaos:
+        from repro.serving.chaos import run_chaos_scenario
+        trace = run_chaos_scenario(cfg, params, planner, scenario=spec,
+                                   seed=args.faults, policy=args.policy,
+                                   fence=args.fence, mesh=mesh,
+                                   disagg=disagg, slo=slo)
+    else:
+        trace = run_scenario(spec, cfg, params, planner,
+                             policy=args.policy, fence=args.fence,
+                             mesh=mesh, disagg=disagg, slo=slo)
     dt = time.perf_counter() - t0
     rep = trace["controller"]
     mode = "disagg cells" if disagg else "monolithic engine"
@@ -99,6 +115,29 @@ def run_scenario_mode(args, full_cfg, cfg, params, mesh=None,
           f"replans {rep['replans']}")
     if disagg:
         _print_disagg_report(trace["disagg"])
+    if args.chaos:
+        _print_chaos_report(trace["chaos"])
+
+
+def _print_chaos_report(rec: dict) -> None:
+    """Human summary + a parseable ``serve/chaos`` row the CI job greps
+    (the run reaching this line at all means zero unhandled
+    exceptions)."""
+    by_kind: dict[str, int] = {}
+    for ev in rec["events"]:
+        by_kind[ev["kind"]] = by_kind.get(ev["kind"], 0) + 1
+    kinds = ", ".join(f"{k}:{n}" for k, n in sorted(by_kind.items()))
+    tripped = ",".join(rec["breaker"]["open"]) or "none"
+    print(f"  chaos (faults seed {rec['seed']}): {rec['injected']} "
+          f"injected over {len(rec['timeline'])} timeline actions")
+    print(f"  incident events      : {kinds or 'none'}")
+    print(f"  breaker              : threshold "
+          f"{rec['breaker']['threshold']}, tripped {tripped}")
+    print(f"serve/chaos,injected={rec['injected']},"
+          f"events={len(rec['events'])},"
+          f"degrades={by_kind.get('degrade', 0)},"
+          f"trips={by_kind.get('trip', 0)},"
+          f"sheds={by_kind.get('shed', 0)},unhandled=0", flush=True)
 
 
 def main() -> None:
@@ -134,6 +173,17 @@ def main() -> None:
     ap.add_argument("--starvation-age", type=int, default=8, metavar="N",
                     help="with --disagg: ticks after which a waiting "
                     "throughput-class request outranks latency traffic")
+    ap.add_argument("--admission-capacity", type=int, default=None,
+                    metavar="N", help="with --disagg: admission-queue "
+                    "capacity; arrivals over it shed the lowest SLO "
+                    "class first (default unbounded, never sheds)")
+    ap.add_argument("--chaos", action="store_true",
+                    help="run the scenario under a seeded fault "
+                         "timeline (serving/chaos.py); implies "
+                         "--scenario chaos unless one is given")
+    ap.add_argument("--faults", type=int, default=0, metavar="SEED",
+                    help="with --chaos: fault-timeline seed (same seed, "
+                         "same faults at the same ticks)")
     ap.add_argument("--mesh", type=int, default=None, metavar="N",
                     help="run the PIM lane resolution as one shard_map "
                          "program over an N-device 'lanes' mesh (needs N "
@@ -150,6 +200,8 @@ def main() -> None:
                          "REPRO_LANE_BACKEND env or scan); pallas/auto "
                          "fall back to scan when unsupported")
     args = ap.parse_args()
+    if args.chaos and not args.scenario:
+        args.scenario = "chaos"
 
     t_start = time.perf_counter()
     lane_engine.configure_lane_backend(args.lane_backend)

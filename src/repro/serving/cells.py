@@ -45,6 +45,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ArchConfig
+from repro.core import faults
 from repro.models import model as M
 from .engine import Request
 from .offload import OffloadPlanner
@@ -94,6 +95,25 @@ class AdmissionQueue:
         enq, _, req, slo = self._entries.pop(pick)
         return req, slo, enq
 
+    def shed(self, tick: int) -> tuple[Request, str, int]:
+        """(request, slo, enqueue tick) of the entry to drop under
+        admission pressure — the exact inverse of :meth:`pop`, same
+        spec as ``scenarios._shed_pick``: youngest non-starved
+        throughput request first, then youngest latency, starved
+        throughput only when nothing else waits (aging preserved)."""
+        fresh = [i for i, (enq, _, _, slo) in enumerate(self._entries)
+                 if slo == SLO_THROUGHPUT
+                 and tick - enq < self.starvation_age]
+        if fresh:
+            pick = max(fresh, key=lambda i: self._entries[i][:2])
+        else:
+            latency = [i for i, e in enumerate(self._entries)
+                       if e[3] == SLO_LATENCY]
+            pool = latency or range(len(self._entries))
+            pick = max(pool, key=lambda i: self._entries[i][:2])
+        enq, _, req, slo = self._entries.pop(pick)
+        return req, slo, enq
+
 
 @dataclasses.dataclass
 class KVHandoff:
@@ -120,6 +140,16 @@ class KVHandoffQueue:
         return len(self._q)
 
     def room(self) -> bool:
+        inj = faults.injector()
+        if inj is not None and inj.should_fail("handoff") is not None:
+            # Simulated handoff pressure: report the queue full so the
+            # prefill cell stalls this tick — the graceful path the
+            # bound already exercises, never the overrun crash below.
+            faults.record_event("handoff", "inject",
+                                "simulated handoff pressure")
+            faults.record_event("handoff", "stall",
+                                "prefill cell stalls (queue reported full)")
+            return False
         return self.bound is None or len(self._q) < self.bound
 
     def push(self, item: KVHandoff) -> None:
@@ -150,21 +180,35 @@ class PrefillCell:
 
     def __init__(self, cfg: ArchConfig, params, max_seq: int,
                  budget: int | None = None, starvation_age: int = 8,
+                 admission_capacity: int | None = None,
                  controller: Optional[OffloadController] = None):
         self.cfg, self.params = cfg, params
         self.max_seq = max_seq
         self.budget = budget
+        self.admission_capacity = admission_capacity
         self.queue = AdmissionQueue(starvation_age)
         self.controller = controller
         self.stats = dict(prefills=0, ticks=0)
         self.prefill_ticks: dict[int, int] = {}
         self.enq_ticks: dict[int, int] = {}
         self.slo_of: dict[int, str] = {}
+        self.shed: dict[int, int] = {}    # rid -> shed tick
 
     def submit(self, req: Request, slo: str, tick: int) -> None:
         self.queue.push(req, slo, tick)
         self.enq_ticks[req.rid] = tick
         self.slo_of[req.rid] = slo
+        while (self.admission_capacity is not None
+               and len(self.queue) > self.admission_capacity):
+            # SLO-aware load shedding: drop the lowest-priority waiter
+            # (AdmissionQueue.shed = inverse admission order) instead of
+            # letting pressure reach the handoff-overrun invariant.
+            victim, vslo, _ = self.queue.shed(tick)
+            self.shed[victim.rid] = tick
+            faults.record_event(
+                "admission", "shed",
+                f"rid={victim.rid} slo={vslo} "
+                f"(capacity {self.admission_capacity})", tick=tick)
 
     def _prefill(self, req: Request) -> KVHandoff:
         s = len(req.prompt)
@@ -197,6 +241,8 @@ class PrefillCell:
     def report(self) -> dict:
         out = dict(self.stats)
         out["waiting"] = len(self.queue)
+        if self.admission_capacity is not None:
+            out["shed"] = len(self.shed)
         if self.controller is not None:
             out["policy"] = self.controller.report()
         return out
@@ -319,6 +365,7 @@ class DisaggServingEngine:
         self.prefill_cell = PrefillCell(
             cfg, params, max_seq, budget=self.disagg.prefill_budget,
             starvation_age=self.disagg.starvation_age,
+            admission_capacity=self.disagg.admission_capacity,
             controller=prefill_controller)
         self.decode_cell = DecodeCell(cfg, params, slots, max_seq,
                                       planner=planner,
@@ -343,6 +390,11 @@ class DisaggServingEngine:
     @property
     def completions(self) -> dict[int, int]:
         return self.decode_cell.completions
+
+    @property
+    def shed(self) -> dict[int, int]:
+        """rid -> tick of every request dropped by admission shedding."""
+        return self.prefill_cell.shed
 
     @property
     def planner(self):
@@ -435,4 +487,9 @@ class DisaggServingEngine:
             per_class=self._slo_summary(),
             requests={k: {str(r): t for r, t in sorted(v.items())}
                       for k, v in self.request_ticks().items()})
+        if self.disagg.admission_capacity is not None:
+            # Key present only under bounded admission so pre-shedding
+            # golden traces stay byte-identical.
+            out["disagg"]["shed"] = {
+                str(r): t for r, t in sorted(self.shed.items())}
         return out

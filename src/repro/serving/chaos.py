@@ -1,0 +1,233 @@
+"""Chaos harness: seeded fault timelines composed over serve scenarios.
+
+``core/faults.py`` owns the primitives (injection seams, breaker,
+retry, event log); this module owns the *choreography*: a
+:class:`ChaosAction` timeline says which fault fires at which serve
+tick, :func:`make_chaos_timeline` derives a deterministic timeline from
+a seed and the process's active degradation ladder, and
+:func:`run_chaos_scenario` drives a real scenario run
+(``scenarios.run_scenario``) with the timeline firing from the driver's
+``on_tick`` hook — retries backing off against a
+:class:`~repro.core.faults.VirtualClock` so a chaos run never
+real-sleeps.
+
+The contract the chaos suite pins: because every ladder rung is
+bit-identical and cache poison/eviction only changes *where* a lane
+total comes from, a degraded run completes the same request set with
+byte-identical per-request outputs as the healthy single-device scan
+baseline — and for fault schedules that never touch scheduling (backend
+faults, cache faults, planner faults) the whole exported trace is
+byte-identical.  Scheduling faults (handoff pressure, admission
+shedding) shift *when* work happens, never *what* it computes.
+
+Every injected fault and every degradation step lands in the trace's
+``"chaos"`` record (timeline + structured event log + breaker state),
+so an incident is replayable from the trace alone:
+``run_chaos_scenario`` with the same seed and config reproduces the
+same faults at the same ticks, byte for byte.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core import engine, faults
+from .scenarios import ScenarioSpec, make_scenario, run_scenario
+
+CHAOS_SITES = (
+    "backend", "lane_cache.poison", "lane_cache.scrub",
+    "lane_cache.storm", "handoff", "planner", "replan",
+)
+
+# Actions that neither arm faults nor corrupt state — the subset a
+# fault-free baseline run replays so its control flow (replans, cache
+# temperature) matches the chaos run's exactly, making the two traces
+# byte-comparable.
+NEUTRAL_ACTIONS = ("lane_cache.scrub", "lane_cache.storm", "replan")
+
+
+@dataclasses.dataclass(frozen=True)
+class ChaosAction:
+    """One scheduled fault: at serve tick ``tick``, do ``action``.
+
+    ``action`` vocabulary — ``backend.<rung>`` arms ``count`` injected
+    failures at that ladder rung (``count < 0`` = persistent, the
+    breaker-trip path); ``lane_cache.poison`` corrupts ``count`` cached
+    lane entries in place; ``lane_cache.scrub`` runs the integrity sweep
+    (deterministic detection of whatever poison is still unread);
+    ``lane_cache.storm`` drops the whole lane LRU cold (the eviction
+    storm's observable effect: every lane misses and re-resolves);
+    ``handoff`` arms ``count`` ticks of simulated handoff-queue pressure
+    (the prefill cell stalls); ``planner`` arms ``count`` planner
+    failures (absorbed by retry, or degraded to host-only offload);
+    ``replan`` forces the serve controller through a refresh re-plan —
+    the chaos drill that makes the engine re-resolve lanes mid-run, so
+    armed backend faults and cold caches are actually hit between the
+    initial plan and drain.
+    """
+
+    tick: int
+    action: str
+    count: int = 1
+    note: str = ""
+
+    def to_record(self) -> dict:
+        return dict(tick=self.tick, action=self.action,
+                    count=self.count, note=self.note)
+
+    @staticmethod
+    def from_record(rec: dict) -> "ChaosAction":
+        return ChaosAction(**rec)
+
+
+def baseline_timeline(timeline: list[ChaosAction]) -> list[ChaosAction]:
+    """The fault-free shadow of a timeline: only the neutral actions
+    (scrubs, storms, forced replans) survive.  A healthy run driven by
+    this shadow performs the identical planner queries and cache
+    misses, so the parity suite can diff its trace byte-for-byte
+    against the faulted run's."""
+    return [a for a in timeline if a.action in NEUTRAL_ACTIONS]
+
+
+def apply_action(act: ChaosAction, inj: faults.FaultInjector,
+                 eng=None) -> None:
+    """Fire one timeline action (called at its tick by the driver)."""
+    if act.action.startswith("backend."):
+        inj.arm(act.action, count=act.count,
+                message=act.note or f"chaos: {act.action}")
+    elif act.action == "lane_cache.poison":
+        n = engine.lane_cache_poison(act.count, seed=act.tick)
+        faults.record_event("lane_cache", "inject",
+                            f"poisoned {n} cached lane entries")
+    elif act.action == "lane_cache.scrub":
+        engine.lane_cache_verify()
+    elif act.action == "lane_cache.storm":
+        info = engine.lane_cache_info()
+        engine.lane_cache_clear()
+        faults.record_event(
+            "lane_cache", "inject",
+            f"eviction storm: {info['size']} entries dropped cold")
+    elif act.action in ("handoff", "planner"):
+        inj.arm(act.action, count=act.count,
+                message=act.note or f"chaos: {act.action} pressure")
+    elif act.action == "replan":
+        ctrl = getattr(eng, "controller", None)
+        if ctrl is not None:
+            batch = ctrl.trace[-1].batch if ctrl.trace else 1
+            ctrl.replan(batch, refresh=True)
+    else:
+        raise ValueError(f"unknown chaos action {act.action!r}")
+
+
+def make_chaos_timeline(seed: int = 0, horizon: int = 30,
+                        rungs: list[str] | None = None,
+                        scheduling: bool = True) -> list[ChaosAction]:
+    """A deterministic fault timeline covering every seam.
+
+    Same ``(seed, horizon, rungs, scheduling)`` always yields the same
+    actions at the same ticks.  The composition: one transient fault on
+    the top ladder rung early (absorbed by retry), one persistent burst
+    on the top rung mid-run when a lower rung exists (trips the breaker,
+    steps the ladder down), a lane-cache poison paired with a scrub one
+    tick later (deterministic detection), an eviction storm, a planner
+    fault armed before the first plan, and — when ``scheduling`` —
+    handoff pressure.  ``scheduling=False`` yields a timeline whose
+    faults provably cannot move work between ticks, the schedules the
+    byte-identical-trace parity tests run.
+    """
+    rungs = list(rungs) if rungs is not None else engine.ladder_rungs()
+    rng = np.random.default_rng(seed)
+    top = "backend." + rungs[0]
+    acts = [
+        ChaosAction(0, "planner", 1, "planner timeout before first plan"),
+        ChaosAction(0, top, 1, "transient fault on the initial plan"),
+    ]
+    # Poison a couple of cached lanes and catch them with a scrub.
+    t0 = 2 + int(rng.integers(0, max(horizon // 4, 1)))
+    acts.append(ChaosAction(t0, "lane_cache.poison",
+                            1 + int(rng.integers(0, 2))))
+    acts.append(ChaosAction(t0 + 1, "lane_cache.scrub", 0))
+    if len(rungs) > 1:
+        acts.append(ChaosAction(
+            t0 + 1, top, -1,
+            "persistent: trip the breaker, step the ladder down"))
+    # Eviction-storm + forced-replan pairs (the storm sorts first at
+    # equal ticks): each drops the cache fully cold and immediately
+    # re-plans, so every pair re-resolves the identical lane set — the
+    # faulted and baseline runs' miss counters stay in lockstep — and
+    # each cold resolve hits whatever is armed.  Four pairs trip a
+    # persistent top-rung fault through the default K=3 breaker and
+    # leave the last resolve on the skip path.
+    gap = max(2, horizon // 8)
+    for k in range(4):
+        acts.append(ChaosAction(t0 + 2 + k * gap, "lane_cache.storm", 0))
+        acts.append(ChaosAction(t0 + 2 + k * gap, "replan", 0,
+                                f"forced refresh replan {k + 1}/4"))
+    if scheduling:
+        acts.append(ChaosAction(int(rng.integers(2, max(horizon - 2, 3))),
+                                "handoff", int(rng.integers(1, 4))))
+    return sorted(acts, key=lambda a: (a.tick, a.action))
+
+
+def run_chaos_scenario(cfg, params, planner,
+                       scenario: "ScenarioSpec | None" = None,
+                       seed: int = 0, quick: bool = False,
+                       slots: int = 8, policy: str = "sticky",
+                       fence: bool = True,
+                       timeline: "list[ChaosAction] | None" = None,
+                       breaker_threshold: int = 3, retries: int = 1,
+                       mesh=None, disagg=False, slo=None,
+                       policy_kw: dict | None = None) -> dict:
+    """Serve a scenario under a seeded fault timeline; return the trace.
+
+    Resets the fault state (events, breaker with ``breaker_threshold``,
+    a fresh injector), runs ``scenarios.run_scenario`` with the timeline
+    firing via ``on_tick``, retry backoffs on a
+    :class:`~repro.core.faults.VirtualClock` (no real sleeps), and
+    attaches the incident record under ``trace["chaos"]``: the timeline,
+    every structured fault/degradation event (tick-tagged), the breaker
+    state and the simulated backoff sleeps.  Deterministic end to end —
+    the golden chaos trace pins the whole record byte-exactly.
+    """
+    with engine.lane_mesh_scope(mesh):
+        spec = scenario if scenario is not None else \
+            make_scenario("chaos", seed=seed, slots=slots, quick=quick)
+        if timeline is None:
+            horizon = (max(a.step for a in spec.arrivals) + 1
+                       if spec.arrivals else 1)
+            timeline = make_chaos_timeline(seed, horizon=max(horizon, 8))
+        by_tick: dict[int, list[ChaosAction]] = {}
+        for act in timeline:
+            by_tick.setdefault(act.tick, []).append(act)
+        clock = faults.VirtualClock()
+        inj = faults.FaultInjector()
+        faults.reset_events()
+        faults.configure_breaker(breaker_threshold)
+
+        def on_tick(t: int, eng) -> None:
+            faults.set_tick(t)
+            for act in by_tick.get(t, ()):
+                apply_action(act, inj, eng)
+
+        try:
+            with faults.fault_scope(inj), \
+                    faults.retry_scope(retries=retries, clock=clock):
+                trace = run_scenario(
+                    spec, cfg, params, planner, policy=policy,
+                    fence=fence, policy_kw=policy_kw,
+                    mesh=engine.lane_mesh(), disagg=disagg, slo=slo,
+                    on_tick=on_tick)
+        finally:
+            faults.set_tick(None)
+    trace["chaos"] = dict(
+        seed=seed,
+        breaker_threshold=breaker_threshold,
+        retries=retries,
+        timeline=[a.to_record() for a in timeline],
+        injected=inj.injected,
+        events=faults.events(),
+        breaker=faults.backend_breaker().info(),
+        backoff_sleeps=list(clock.sleeps),
+    )
+    return trace

@@ -29,7 +29,7 @@ from __future__ import annotations
 
 import dataclasses
 
-from repro.core import engine
+from repro.core import engine, faults
 from .offload import offload_set, step_cost
 
 
@@ -236,13 +236,27 @@ class OffloadController:
         self._host_ns = 0.0
         self._mixed_ns = 0.0
         self._oracle_ns = 0.0
+        self.planner_degraded = False
 
     # -- planner access (the accounting boundary) ----------------------
     @property
     def decisions(self):
         if self._decisions is None:
-            self._decisions = self.planner.plan(fence=self.fence,
-                                                spec=self.spec)
+            try:
+                self._decisions = faults.retry_call(
+                    lambda: self.planner.plan(fence=self.fence,
+                                              spec=self.spec),
+                    site="planner")
+            except Exception as e:  # noqa: BLE001 - planner timeout path
+                # Degrade to host-only serving: an empty decision set
+                # offloads nothing, so the serve loop keeps running
+                # (correct tokens, no PIM speedup) instead of crashing.
+                self.planner_degraded = True
+                self._decisions = []
+                faults.record_event(
+                    "planner", "degrade",
+                    f"host-only offload set after planner failure: "
+                    f"{type(e).__name__}: {e}")
         return self._decisions
 
     def query(self, batch: int) -> frozenset:
@@ -287,18 +301,25 @@ class OffloadController:
 
     def report(self) -> dict:
         steps = self._step
-        if steps == 0:
+        if steps == 0 or self._host_ns == 0:
+            # No steps, or a planner-degraded run whose empty decision
+            # set accrued zero cost — every ratio is neutral.
             realized = oracle = efficiency = 1.0
         else:
             realized = self._host_ns / max(self._mixed_ns, 1e-9)
             oracle = self._host_ns / max(self._oracle_ns, 1e-9)
             efficiency = self._oracle_ns / max(self._mixed_ns, 1e-9)
-        return dict(policy=self.policy.name, steps=steps,
-                    switches=self.switches,
-                    planner_queries=self.planner_queries,
-                    replans=self.replans,
-                    host_ns=self._host_ns, mixed_ns=self._mixed_ns,
-                    oracle_ns=self._oracle_ns,
-                    realized_speedup=realized, oracle_speedup=oracle,
-                    efficiency=efficiency,
-                    switch_log=list(self.switch_log))
+        out = dict(policy=self.policy.name, steps=steps,
+                   switches=self.switches,
+                   planner_queries=self.planner_queries,
+                   replans=self.replans,
+                   host_ns=self._host_ns, mixed_ns=self._mixed_ns,
+                   oracle_ns=self._oracle_ns,
+                   realized_speedup=realized, oracle_speedup=oracle,
+                   efficiency=efficiency,
+                   switch_log=list(self.switch_log))
+        if self.planner_degraded:
+            # Conditional so healthy reports (and pinned golden traces)
+            # keep their exact key set.
+            out["planner_degraded"] = True
+        return out

@@ -13,6 +13,11 @@ survive:
 * ``prefill-heavy`` — few requests, long prompts, short decode budgets.
 * ``drain-refill``  — waves separated by idle gaps (occupancy collapses
                       to zero and refills from empty).
+* ``chaos``         — heavy pressure spikes over a low background rate,
+                      sized so bounded admission/handoff configs shed:
+                      the arrival schedule the fault-injection harness
+                      (``serving/chaos.py``) composes fault timelines
+                      over.
 
 ``simulate_batches`` mirrors :class:`ServingEngine`'s admission and
 completion semantics exactly (requests finish on their decode budget,
@@ -35,6 +40,30 @@ import math
 from typing import Sequence
 
 import numpy as np
+
+
+class ScenarioDrainError(RuntimeError):
+    """A scenario failed to drain within its tick bound.
+
+    Carries the queue state at the moment of failure so a wedged run is
+    diagnosable from the exception alone: per-queue depths, the age of
+    the oldest still-queued request, and the last tick's batch
+    composition.
+    """
+
+    def __init__(self, name: str, tick: int, queues: dict[str, int],
+                 oldest_age: int | None, last_batch):
+        self.name = name
+        self.tick = tick
+        self.queues = dict(queues)
+        self.oldest_age = oldest_age
+        self.last_batch = list(last_batch)
+        depths = ", ".join(f"{q}={d}" for q, d in self.queues.items())
+        age = "n/a" if oldest_age is None else f"{oldest_age} ticks"
+        super().__init__(
+            f"scenario {name!r} did not drain within {tick} ticks: "
+            f"queue depths [{depths}], oldest queued request age {age}, "
+            f"last-tick batch {self.last_batch}")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -137,12 +166,27 @@ def _drain_refill(rng, slots: int, quick: bool):
     return raw
 
 
+def _chaos(rng, slots: int, quick: bool):
+    # Short, hard pressure spikes over a trickle background: queues
+    # deepen fast enough that bounded admission capacities actually
+    # shed, and the idle stretches between spikes let the degradation
+    # ladder's retries/replans land on a drained system.
+    horizon = 30 if quick else 90
+    raw = []
+    for t in range(horizon):
+        lam = 2.4 if t % 12 < 3 else 0.25
+        for _ in range(rng.poisson(lam)):
+            raw.append((t, rng.integers(4, 14), rng.integers(3, 8)))
+    return raw
+
+
 SCENARIOS = {
     "steady": _steady,
     "bursty": _bursty,
     "diurnal": _diurnal,
     "prefill-heavy": _prefill_heavy,
     "drain-refill": _drain_refill,
+    "chaos": _chaos,
 }
 
 
@@ -191,8 +235,13 @@ def simulate_batches(spec: ScenarioSpec, max_ticks: int = 100_000
                 active[s] -= 1
         t += 1
         if t > max_ticks:
-            raise RuntimeError(f"scenario {spec.name} did not drain "
-                               f"within {max_ticks} ticks")
+            raise ScenarioDrainError(
+                spec.name, max_ticks,
+                queues=dict(waiting=len(waiting),
+                            pending=len(pending) - i),
+                oldest_age=(t - min(a.step for a in waiting)
+                            if waiting else None),
+                last_batch=[rem for rem in active if rem > 0])
     return batches
 
 
@@ -223,11 +272,19 @@ class DisaggConfig:
     that has waited this many ticks outranks every latency-class
     request, so sustained latency bursts cannot starve the throughput
     class (the fuzzed no-starvation property).
+    ``admission_capacity`` — SLO-aware load shedding: the admission
+    queue never holds more than this many waiting requests (``None`` =
+    unbounded).  Each arrival that pushes the queue over capacity sheds
+    one request per :func:`_shed_pick` — the exact inverse of the
+    admission order, so the lowest-priority request goes first and
+    aging protection is preserved.  Shed requests leave the system
+    (never prefilled, never decoded) and are reported per class.
     """
 
     prefill_budget: int | None = None
     handoff_bound: int | None = None
     starvation_age: int = 8
+    admission_capacity: int | None = None
 
     def __post_init__(self):
         if self.prefill_budget is not None and self.prefill_budget < 1:
@@ -236,6 +293,9 @@ class DisaggConfig:
             raise ValueError("handoff_bound must be >= 1 or None")
         if self.starvation_age < 0:
             raise ValueError("starvation_age must be >= 0")
+        if (self.admission_capacity is not None
+                and self.admission_capacity < 1):
+            raise ValueError("admission_capacity must be >= 1 or None")
 
     @staticmethod
     def mirror() -> "DisaggConfig":
@@ -244,7 +304,12 @@ class DisaggConfig:
         return DisaggConfig()
 
     def to_record(self) -> dict:
-        return dataclasses.asdict(self)
+        # admission_capacity is omitted when unset so records written
+        # before shedding existed stay byte-identical (golden fixtures).
+        rec = dataclasses.asdict(self)
+        if rec["admission_capacity"] is None:
+            del rec["admission_capacity"]
+        return rec
 
     @staticmethod
     def from_record(rec: dict) -> "DisaggConfig":
@@ -285,6 +350,27 @@ def _admission_pick(waiting: list, t: int, starvation_age: int) -> int:
     return min(pool, key=lambda i: waiting[i][:2])
 
 
+def _shed_pick(waiting: list, t: int, starvation_age: int) -> int:
+    """Index of the request to shed under admission pressure — THE shed
+    order spec, the exact inverse of :func:`_admission_pick`.
+
+    ``waiting`` entries are ``(enq_tick, seq, rid, slo)``.  The youngest
+    non-starved throughput-class request goes first (lowest class,
+    least sunk wait); then the youngest latency-class request; only
+    when every waiting request is a starved throughput request does one
+    of those go (youngest first) — so aging protection survives
+    shedding.  ``serving/cells.py``'s ``AdmissionQueue.shed`` is the
+    independent implementation of this same spec.
+    """
+    fresh = [i for i, (enq, _, _, slo) in enumerate(waiting)
+             if slo == SLO_THROUGHPUT and t - enq < starvation_age]
+    if fresh:
+        return max(fresh, key=lambda i: waiting[i][:2])
+    latency = [i for i, w in enumerate(waiting) if w[3] == SLO_LATENCY]
+    pool = latency or range(len(waiting))
+    return max(pool, key=lambda i: waiting[i][:2])
+
+
 def simulate_disagg(spec: ScenarioSpec,
                     disagg: DisaggConfig | None = None,
                     slo: dict[int, str] | None = None,
@@ -302,8 +388,12 @@ def simulate_disagg(spec: ScenarioSpec,
     Returns per-tick decode batches / prefill counts / end-of-tick
     handoff depth plus per-request prefill/admit/completion ticks —
     everything the property suite and the real-cell parity test diff.
-    Under ``DisaggConfig.mirror()`` with a single SLO class the decode
-    batch trace equals ``simulate_batches(spec)`` tick for tick.
+    With ``admission_capacity`` set, every arrival that leaves the
+    waiting queue over capacity sheds one request per
+    :func:`_shed_pick` (recorded in ``shed_ticks``) before the tick's
+    prefills run.  Under ``DisaggConfig.mirror()`` with a single SLO
+    class the decode batch trace equals ``simulate_batches(spec)`` tick
+    for tick.
     """
     cfg = disagg or DisaggConfig.mirror()
     slo = slo or {}
@@ -320,6 +410,7 @@ def simulate_disagg(spec: ScenarioSpec,
     prefill_ticks: dict[int, int] = {}
     admit_ticks: dict[int, int] = {}
     completion_ticks: dict[int, int] = {}
+    shed_ticks: dict[int, int] = {}
     max_depth = 0
     seq = 0
     t = 0
@@ -329,6 +420,11 @@ def simulate_disagg(spec: ScenarioSpec,
             waiting.append((t, seq, a.rid, slo.get(a.rid, SLO_LATENCY)))
             seq += 1
             i += 1
+            if (cfg.admission_capacity is not None
+                    and len(waiting) > cfg.admission_capacity):
+                _, _, rid_s, _ = waiting.pop(
+                    _shed_pick(waiting, t, cfg.starvation_age))
+                shed_ticks[rid_s] = t
         n = 0
         while ((cfg.prefill_budget is None or n < cfg.prefill_budget)
                and (cfg.handoff_bound is None
@@ -355,12 +451,18 @@ def simulate_disagg(spec: ScenarioSpec,
         depth.append(len(handoff))
         t += 1
         if t > max_ticks:
-            raise RuntimeError(f"disagg scenario {spec.name} did not "
-                               f"drain within {max_ticks} ticks")
+            raise ScenarioDrainError(
+                spec.name, max_ticks,
+                queues=dict(waiting=len(waiting), handoff=len(handoff),
+                            pending=len(pending) - i),
+                oldest_age=(t - min(enq for enq, _, _, _ in waiting)
+                            if waiting else None),
+                last_batch=[rem for rem in active if rem > 0])
     return dict(per_tick_batch=batches, per_tick_prefills=prefills,
                 handoff_depth=depth, max_handoff_depth=max_depth,
                 prefill_ticks=prefill_ticks, admit_ticks=admit_ticks,
-                completion_ticks=completion_ticks)
+                completion_ticks=completion_ticks,
+                shed_ticks=shed_ticks)
 
 
 def run_policy_over_trace(planner, policy, batches: Sequence[int],
@@ -390,7 +492,8 @@ def run_scenario(scenario: ScenarioSpec, cfg, params, planner,
                  max_seq: int | None = None,
                  policy_kw: dict | None = None, mesh=None,
                  disagg: "bool | DisaggConfig" = False,
-                 slo: dict[int, str] | None = None) -> dict:
+                 slo: dict[int, str] | None = None,
+                 on_tick=None) -> dict:
     """Serve the scenario end to end (real model decode) under an
     adaptive offload controller; return the replayable trace record.
 
@@ -415,16 +518,23 @@ def run_scenario(scenario: ScenarioSpec, cfg, params, planner,
     monolithic run — the disagg conformance contract — and the record
     gains a ``"disagg"`` key (cell/handoff/SLO telemetry + the embedded
     config, so the trace replays through the cells too).
+
+    ``on_tick`` — optional ``fn(t, engine)`` called at the top of every
+    driver tick, before that tick's submissions.  The chaos harness
+    (``serving/chaos.py``) uses it to fire scheduled fault timelines
+    mid-run; plain runs leave it ``None``.
     """
     from repro.core.engine import lane_mesh_scope
 
     with lane_mesh_scope(mesh):
         return _run_scenario(scenario, cfg, params, planner, policy,
-                             fence, max_seq, policy_kw, disagg, slo)
+                             fence, max_seq, policy_kw, disagg, slo,
+                             on_tick)
 
 
 def _run_scenario(scenario, cfg, params, planner, policy, fence,
-                  max_seq, policy_kw, disagg=False, slo=None) -> dict:
+                  max_seq, policy_kw, disagg=False, slo=None,
+                  on_tick=None) -> dict:
     from .engine import Request, ServingEngine
     from .policy import OffloadController
 
@@ -456,6 +566,8 @@ def _run_scenario(scenario, cfg, params, planner, policy, fence,
     t = 0
     per_tick: list[int] = []
     while i < len(pending) or any(eng.active) or eng.waiting:
+        if on_tick is not None:
+            on_tick(t, eng)
         while i < len(pending) and pending[i].step <= t:
             rid = pending[i].rid
             if disagg:
@@ -467,9 +579,26 @@ def _run_scenario(scenario, cfg, params, planner, policy, fence,
         per_tick.append(eng.step_batches[-1] if stepped else 0)
         t += 1
         if t > 100_000:
-            raise RuntimeError("scenario did not drain")
+            step_of = {a.rid: a.step for a in scenario.arrivals}
+            if disagg:
+                queued = ([e[2].rid for e in eng.prefill_cell
+                           .queue._entries]
+                          + [h.req.rid for h in eng.handoff._q])
+                queues = dict(waiting=len(eng.prefill_cell.queue),
+                              handoff=len(eng.handoff),
+                              pending=len(pending) - i)
+            else:
+                queued = [r.rid for r in eng.waiting]
+                queues = dict(waiting=len(eng.waiting),
+                              pending=len(pending) - i)
+            raise ScenarioDrainError(
+                scenario.name, 100_000, queues=queues,
+                oldest_age=(t - min(step_of[r] for r in queued)
+                            if queued else None),
+                last_batch=[r.rid for r in eng.active if r is not None])
     stats = eng.summary()
-    assert all(r.done for r in reqs.values())
+    shed = getattr(eng, "shed", {})
+    assert all(r.done or r.rid in shed for r in reqs.values())
     trace = dict(
         scenario=scenario.to_record(),
         policy=controller.policy.name,

@@ -14,8 +14,9 @@ where MTBF makes this path hot.
 from __future__ import annotations
 
 import dataclasses
-import time
 from collections import deque
+
+from repro.core.faults import SYSTEM_CLOCK
 
 
 @dataclasses.dataclass
@@ -26,10 +27,16 @@ class HostState:
 
 
 class HeartbeatMonitor:
-    """Tracks host liveness from heartbeat timestamps."""
+    """Tracks host liveness from heartbeat timestamps.
+
+    ``clock`` is any ``time.monotonic``-style callable; the default is
+    the process :data:`repro.core.faults.SYSTEM_CLOCK`, and tests pass
+    :class:`repro.core.faults.VirtualClock` — the same injectable clock
+    the serving retry/backoff path uses, so no fault-tolerance test
+    ever real-sleeps."""
 
     def __init__(self, n_hosts: int, timeout_s: float = 30.0,
-                 clock=time.monotonic):
+                 clock=SYSTEM_CLOCK):
         self.timeout = timeout_s
         self.clock = clock
         now = clock()

@@ -10,7 +10,7 @@ that impossible: every test starts and ends on the default backend
 """
 import pytest
 
-from repro.core import engine
+from repro.core import engine, faults
 
 
 @pytest.fixture(autouse=True)
@@ -19,8 +19,10 @@ def _reset_lane_backend_state():
     engine.configure_lane_mesh(None)
     engine.configure_lane_backend(None)
     engine.configure_scan_unroll(None)
+    faults.reset()
     yield
     engine.configure_lane_devices(None)
     engine.configure_lane_mesh(None)
     engine.configure_lane_backend(None)
     engine.configure_scan_unroll(None)
+    faults.reset()

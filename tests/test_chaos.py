@@ -1,0 +1,638 @@
+"""Chaos battery: fault injection, the degradation ladder, load shedding.
+
+Four layers, mirroring the harness's own structure:
+
+1. *Primitives* (``core/faults.py``) — clocks (no test here ever
+   real-sleeps), deterministic injector schedules, breaker trip exactly
+   at the K-th consecutive failure, retry backoff sequences.
+2. *Seams* — each injection site exercised in isolation: ladder rungs
+   (transient absorbed / persistent degraded / terminal propagates),
+   lane-cache poison caught on the hit path and by the scrub, planner
+   timeouts degrading to host-only offload, handoff pressure stalling
+   instead of crashing, SLO-aware admission shedding (order spec +
+   cells-vs-simulator parity).
+3. *Choreography* (``serving/chaos.py``) — deterministic timelines and
+   the byte-parity contract: a faulted serve run (breaker trips, ladder
+   steps down) emits a trace byte-identical to a healthy run driven by
+   the fault-free shadow timeline, because every rung is bit-identical
+   and non-scheduling faults never move work between ticks.
+4. *Golden* — one seeded chaos incident (disagg cells, shedding,
+   handoff pressure, cache storms) pinned byte-exactly in
+   ``tests/golden/chaos_trace.json``; regenerate deliberately with
+   ``python tests/test_chaos.py``.
+"""
+import json
+import pathlib
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, smoke_config
+from repro.core import engine, faults
+from repro.core.timing import DEFAULT_SYSTEM
+from repro.kernels import lane_scan
+from repro.models import model as M
+from repro.serving import cells
+from repro.serving.chaos import (NEUTRAL_ACTIONS, ChaosAction,
+                                 baseline_timeline, make_chaos_timeline,
+                                 run_chaos_scenario)
+from repro.serving.engine import Request
+from repro.serving.offload import OffloadPlanner
+from repro.serving.policy import OffloadController
+from repro.serving.scenarios import (SLO_LATENCY, SLO_THROUGHPUT,
+                                     DisaggConfig, ScenarioDrainError,
+                                     ScenarioSpec, _shed_pick, assign_slo,
+                                     make_scenario, run_scenario,
+                                     simulate_batches, simulate_disagg)
+from repro.training.fault import HeartbeatMonitor
+
+from test_engine import build_valid_stream, random_op_tuples
+
+GOLDEN = pathlib.Path(__file__).parent / "golden" / "chaos_trace.json"
+GOLDEN_SCENARIO = dict(name="chaos", seed=5, slots=4, quick=True)
+
+
+@pytest.fixture(scope="module")
+def small_lm():
+    cfg = smoke_config(ARCHS["granite-8b"])
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _planner():
+    # Fresh per run: the planner's internal plan cache would otherwise
+    # hide re-resolves from the chaos drills.
+    return OffloadPlanner(ARCHS["mamba2-130m"])
+
+
+def _lanes(seed: int, n: int = 5):
+    rng = np.random.default_rng(seed)
+    cyc = DEFAULT_SYSTEM.derive_cycles()
+    return [(cyc, build_valid_stream(random_op_tuples(rng, max_ops=30)))
+            for _ in range(n)]
+
+
+def _keys(n: int = 5):
+    return [("chaos", i) for i in range(n)]
+
+
+@pytest.fixture(autouse=True)
+def _fresh_lane_cache():
+    engine.lane_cache_reset()
+    yield
+    engine.lane_cache_reset()
+
+
+# ---------------------------------------------------------------------
+# Clocks: the one shared virtual-clock helper
+# ---------------------------------------------------------------------
+
+def test_virtual_clock_protocol():
+    clk = faults.VirtualClock(5.0)
+    assert clk() == clk.now() == 5.0
+    clk.advance(2.5)
+    assert clk() == 7.5
+    clk.sleep(1.5)
+    assert clk.sleeps == [1.5] and clk() == 9.0
+
+
+def test_heartbeat_monitor_on_virtual_clock_never_sleeps():
+    clk = faults.VirtualClock()
+    mon = HeartbeatMonitor(3, timeout_s=10.0, clock=clk)
+    clk.advance(6.0)
+    mon.beat(0)
+    mon.beat(2)
+    clk.advance(5.0)                     # host 1 silent for 11 ticks
+    assert mon.sweep() == [1]
+    assert mon.alive_hosts == [0, 2]
+    clk.advance(6.0)                     # now 0 and 2 are silent too
+    assert sorted(mon.sweep()) == [0, 2]
+    mon.beat(1)                          # a beat revives
+    assert mon.alive_hosts == [1]
+    assert clk.sleeps == []              # liveness without one real sleep
+
+
+def test_retry_backoff_sequence_on_virtual_clock():
+    clk = faults.VirtualClock()
+    inj = faults.FaultInjector()
+    inj.arm("planner", count=3)
+    with faults.fault_scope(inj):
+        out = faults.retry_call(lambda: "ok", "planner", retries=3,
+                                backoff=0.05, clock=clk)
+    assert out == "ok"
+    assert clk.sleeps == [0.05, 0.1, 0.2]       # b * 2**attempt
+
+    inj2 = faults.FaultInjector()
+    inj2.arm("planner", count=-1)
+    clk2 = faults.VirtualClock()
+    with faults.fault_scope(inj2):
+        with pytest.raises(faults.InjectedFault):
+            faults.retry_call(lambda: "ok", "planner", retries=2,
+                              backoff=0.01, clock=clk2)
+    assert clk2.sleeps == [0.01, 0.02]          # exhausted, then raised
+
+
+# ---------------------------------------------------------------------
+# Injector: schedules are exact call indices, never clocks or RNG
+# ---------------------------------------------------------------------
+
+def test_injector_schedule_fires_exact_calls():
+    inj = faults.FaultInjector()
+    inj.arm("x", count=2)                       # calls 0, 1
+    inj.arm("x", count=1, start=4)              # call 4
+    fired = [inj.should_fail("x") is not None for _ in range(6)]
+    assert fired == [True, True, False, False, True, False]
+    assert inj.injected == 3
+    assert inj.should_fail("y") is None
+
+
+def test_maybe_fail_seam():
+    faults.maybe_fail("backend.scan")           # no injector: no-op
+    with faults.fault_scope(faults.FaultInjector()) as inj:
+        faults.maybe_fail("backend.scan")       # nothing armed: no-op
+        inj.arm("backend.scan", count=1, message="boom")
+        with pytest.raises(faults.InjectedFault, match="boom"):
+            faults.maybe_fail("backend.scan")
+    assert faults.injector() is None            # scope restored
+    ev = faults.events()[-1]
+    assert ev["site"] == "backend.scan" and ev["kind"] == "inject"
+
+
+def test_event_tick_tagging():
+    faults.reset_events()
+    faults.set_tick(7)
+    try:
+        faults.record_event("handoff", "stall", "pressure")
+    finally:
+        faults.set_tick(None)
+    faults.record_event("handoff", "stall", "untagged")
+    tagged, untagged = faults.events()
+    assert tagged["tick"] == 7
+    assert "tick" not in untagged
+
+
+# ---------------------------------------------------------------------
+# Circuit breaker: trip exactly at K consecutive failures
+# ---------------------------------------------------------------------
+
+def test_breaker_trips_exactly_at_threshold():
+    br = faults.CircuitBreaker(3)
+    assert br.record_failure("x") is False
+    assert br.record_failure("x") is False
+    assert not br.tripped("x")
+    assert br.record_failure("x") is True       # the K-th, exactly
+    assert br.tripped("x")
+    assert br.record_failure("x") is False      # already open
+    br.record_success("x")
+    assert not br.tripped("x") and br.failures["x"] == 0
+
+
+def test_breaker_success_resets_streak():
+    br = faults.CircuitBreaker(3)
+    br.record_failure("x")
+    br.record_failure("x")
+    br.record_success("x")                      # streak broken
+    br.record_failure("x")
+    assert br.record_failure("x") is False
+    assert br.record_failure("x") is True       # 3 consecutive again
+
+
+def test_breaker_threshold_boundaries():
+    b1 = faults.CircuitBreaker(1)
+    assert b1.record_failure("y") is True       # K=1: first failure trips
+    with pytest.raises(ValueError):
+        faults.CircuitBreaker(0)
+
+
+# ---------------------------------------------------------------------
+# The degradation ladder on resolve_lanes
+# ---------------------------------------------------------------------
+
+def _scan_reference(lanes):
+    engine.lane_cache_clear()
+    ref = engine.resolve_lanes(lanes, need_issue=False)
+    return [t for _, t in ref]
+
+
+def test_ladder_terminal_rung_is_always_scan():
+    rungs = engine.ladder_rungs()
+    assert rungs and rungs[-1] == "scan"
+    assert len(set(rungs)) == len(rungs)
+
+
+def test_ladder_transient_fault_absorbed_byte_exact():
+    lanes = _lanes(0)
+    ref = _scan_reference(lanes)
+    inj = faults.FaultInjector()
+    inj.arm("backend." + engine.ladder_rungs()[0], count=1)
+    engine.lane_cache_clear()
+    clk = faults.VirtualClock()
+    with faults.fault_scope(inj), faults.retry_scope(clock=clk):
+        got = engine.resolve_lanes(lanes, need_issue=False)
+    assert [t for _, t in got] == ref
+    kinds = [e["kind"] for e in faults.events()]
+    assert "retry" in kinds and "degrade" not in kinds
+    assert clk.sleeps                         # backed off, virtually
+    assert not faults.backend_breaker().info()["open"]
+
+
+@pytest.mark.skipif(not lane_scan.pallas_lane_supported(),
+                    reason="pallas lane kernel unsupported here")
+def test_ladder_persistent_fault_degrades_byte_exact():
+    lanes = _lanes(1)
+    ref = _scan_reference(lanes)
+    with engine.lane_backend_scope("pallas"):
+        assert engine.ladder_rungs()[0] == "pallas"
+        inj = faults.FaultInjector()
+        inj.arm("backend.pallas", count=-1)
+        engine.lane_cache_clear()
+        with faults.fault_scope(inj), \
+                faults.retry_scope(clock=faults.VirtualClock()):
+            got = engine.resolve_lanes(lanes, need_issue=False)
+    assert [t for _, t in got] == ref         # degraded bytes == healthy
+    kinds = [e["kind"] for e in faults.events()]
+    assert "degrade" in kinds
+
+
+@pytest.mark.skipif(not lane_scan.pallas_lane_supported(),
+                    reason="pallas lane kernel unsupported here")
+def test_ladder_breaker_trips_then_skips_rung():
+    lanes = _lanes(2)
+    ref = _scan_reference(lanes)
+    with engine.lane_backend_scope("pallas"):
+        faults.configure_breaker(2)
+        inj = faults.FaultInjector()
+        inj.arm("backend.pallas", count=-1)
+        with faults.fault_scope(inj), \
+                faults.retry_scope(retries=0, clock=faults.VirtualClock()):
+            for _ in range(3):                # fail, trip, then skip
+                engine.lane_cache_clear()
+                got = engine.resolve_lanes(lanes, need_issue=False)
+                assert [t for _, t in got] == ref
+    kinds = [e["kind"] for e in faults.events()]
+    assert "trip" in kinds and "skip" in kinds
+    assert faults.backend_breaker().tripped("backend.pallas")
+
+
+def test_terminal_rung_failure_propagates():
+    engine.configure_lane_devices(1)          # ladder is exactly [scan]
+    assert engine.ladder_rungs() == ["scan"]
+    inj = faults.FaultInjector()
+    inj.arm("backend.scan", count=-1)
+    engine.lane_cache_clear()
+    with faults.fault_scope(inj), \
+            faults.retry_scope(clock=faults.VirtualClock()):
+        with pytest.raises(faults.InjectedFault):
+            engine.resolve_lanes(_lanes(3, n=2), need_issue=False)
+
+
+# ---------------------------------------------------------------------
+# Lane-cache poison: detected on the hit path and by the scrub
+# ---------------------------------------------------------------------
+
+def test_poison_detected_on_hit_path_falls_back_cold():
+    lanes = _lanes(4)
+    ref = engine.resolve_lanes(lanes, keys=_keys(), need_issue=False)
+    assert engine.lane_cache_poison(2, seed=0) == 2
+    faults.reset_events()
+    before = engine.lane_cache_info()["misses"]
+    got = engine.resolve_lanes(lanes, keys=_keys(), need_issue=False)
+    assert [t for _, t in got] == [t for _, t in ref]   # never stale
+    detects = [e for e in faults.events() if e["kind"] == "detect"]
+    assert len(detects) == 2
+    assert engine.lane_cache_info()["misses"] == before + 2
+
+
+def test_poison_scrub_detects_unread_entries():
+    engine.resolve_lanes(_lanes(5), keys=_keys(), need_issue=False)
+    assert engine.lane_cache_poison(3, seed=1) == 3
+    faults.reset_events()
+    assert engine.lane_cache_verify() == 3
+    detects = [e for e in faults.events() if e["kind"] == "detect"]
+    assert len(detects) == 3
+    assert engine.lane_cache_verify() == 0    # sweep is idempotent
+
+
+def test_poison_empty_cache_is_noop():
+    engine.lane_cache_clear()
+    assert engine.lane_cache_poison(4) == 0
+    assert engine.lane_cache_verify() == 0
+
+
+# ---------------------------------------------------------------------
+# Planner faults: absorbed by retry, or degraded to host-only offload
+# ---------------------------------------------------------------------
+
+def test_planner_transient_fault_absorbed():
+    ctrl = OffloadController(_planner(), policy="sticky")
+    inj = faults.FaultInjector()
+    inj.arm("planner", count=1)
+    with faults.fault_scope(inj), \
+            faults.retry_scope(clock=faults.VirtualClock()):
+        ctrl.observe(2)
+    assert not ctrl.planner_degraded
+    assert "planner_degraded" not in ctrl.report()
+    kinds = [e["kind"] for e in faults.events()]
+    assert "retry" in kinds and "degrade" not in kinds
+
+
+def test_planner_persistent_fault_degrades_host_only():
+    ctrl = OffloadController(_planner(), policy="sticky")
+    inj = faults.FaultInjector()
+    inj.arm("planner", count=-1)
+    with faults.fault_scope(inj), \
+            faults.retry_scope(clock=faults.VirtualClock()):
+        ctrl.observe(2)
+        ctrl.observe(3)
+    assert ctrl.planner_degraded
+    assert ctrl.decisions == []               # host-only offload set
+    rep = ctrl.report()
+    assert rep["planner_degraded"] is True
+    assert "degrade" in [e["kind"] for e in faults.events()]
+
+
+# ---------------------------------------------------------------------
+# Handoff pressure: stall, never the overrun crash
+# ---------------------------------------------------------------------
+
+def test_handoff_pressure_stalls_gracefully():
+    q = cells.KVHandoffQueue(bound=2)
+    inj = faults.FaultInjector()
+    inj.arm("handoff", count=2)
+    with faults.fault_scope(inj):
+        assert q.room() is False
+        assert q.room() is False
+        assert q.room() is True               # pressure passed
+    kinds = [e["kind"] for e in faults.events()]
+    assert kinds.count("stall") == 2 and kinds.count("inject") == 2
+    assert q.room() is True                   # no injector: bound rules
+
+
+# ---------------------------------------------------------------------
+# SLO-aware admission shedding
+# ---------------------------------------------------------------------
+
+def test_shed_pick_order_spec():
+    t, age = 10, 8
+    waiting = [(0, 0, 0, SLO_THROUGHPUT),     # starved (protected)
+               (5, 1, 1, SLO_LATENCY),
+               (7, 2, 2, SLO_LATENCY),
+               (6, 3, 3, SLO_THROUGHPUT),     # fresh
+               (8, 4, 4, SLO_THROUGHPUT)]     # fresh, youngest
+    assert waiting[_shed_pick(waiting, t, age)][2] == 4
+    del waiting[4]
+    assert waiting[_shed_pick(waiting, t, age)][2] == 3
+    del waiting[3]
+    assert waiting[_shed_pick(waiting, t, age)][2] == 2   # youngest latency
+    del waiting[2]
+    assert waiting[_shed_pick(waiting, t, age)][2] == 1
+    del waiting[1]
+    assert waiting[_shed_pick(waiting, t, age)][2] == 0   # only then starved
+
+
+def test_admission_queue_shed_matches_sim_spec():
+    rng = np.random.default_rng(0)
+    for _ in range(20):
+        n = int(rng.integers(2, 10))
+        q = cells.AdmissionQueue(starvation_age=4)
+        waiting = []
+        for i in range(n):
+            enq = int(rng.integers(0, 10))
+            slo = SLO_LATENCY if rng.random() < 0.5 else SLO_THROUGHPUT
+            q.push(Request(rid=i, prompt=np.arange(4), max_new=3), slo, enq)
+            waiting.append((enq, i, i, slo))
+        t = 12
+        while waiting:
+            want = waiting.pop(_shed_pick(waiting, t, 4))[2]
+            got, _, _ = q.shed(t)
+            assert got.rid == want
+
+
+def test_disagg_shedding_cells_vs_sim_parity(small_lm):
+    cfg, params = small_lm
+    spec = make_scenario("chaos", seed=3, slots=4, quick=True)
+    dcfg = DisaggConfig(prefill_budget=2, handoff_bound=3,
+                        starvation_age=4, admission_capacity=5)
+    slo = assign_slo(spec, 0.5)
+    sim = simulate_disagg(spec, dcfg, slo)
+    assert sim["shed_ticks"], "scenario must actually shed"
+    trace = run_scenario(spec, cfg, params, _planner(), policy="sticky",
+                         disagg=dcfg, slo=slo)
+    d = trace["disagg"]
+    assert d["shed"] == {str(r): t
+                         for r, t in sorted(sim["shed_ticks"].items())}
+    assert d["requests"]["completion_ticks"] == \
+        {str(r): t for r, t in sorted(sim["completion_ticks"].items())}
+    shed, done = set(sim["shed_ticks"]), set(sim["completion_ticks"])
+    assert not (shed & done)                  # shed XOR completed,
+    assert shed | done == {a.rid for a in spec.arrivals}   # exhaustively
+    # shed events carry their tick in the structured log
+    evs = [e for e in faults.events()
+           if e["site"] == "admission" and e["kind"] == "shed"]
+    assert len(evs) == len(shed) and all("rid=" in e["detail"] for e in evs)
+
+
+def test_unbounded_admission_never_sheds_and_omits_keys(small_lm):
+    cfg, params = small_lm
+    spec = make_scenario("chaos", seed=3, slots=4, quick=True)
+    sim = simulate_disagg(spec, DisaggConfig.mirror())
+    assert sim["shed_ticks"] == {}
+    rec = DisaggConfig.mirror().to_record()
+    assert "admission_capacity" not in rec    # golden-trace byte stability
+    trace = run_scenario(spec, cfg, params, _planner(), disagg=True)
+    assert "shed" not in trace["disagg"]
+    assert "shed" not in trace["disagg"]["prefill"]
+
+
+def test_boundary_configs_still_drain():
+    spec = make_scenario("chaos", seed=1, slots=2, quick=True)
+    rids = {a.rid for a in spec.arrivals}
+    for dcfg in (DisaggConfig(prefill_budget=1),
+                 DisaggConfig(handoff_bound=1),
+                 DisaggConfig(prefill_budget=1, handoff_bound=1,
+                              admission_capacity=1, starvation_age=2)):
+        sim = simulate_disagg(spec, dcfg, assign_slo(spec, 0.5))
+        if dcfg.handoff_bound is not None:
+            assert sim["max_handoff_depth"] <= dcfg.handoff_bound
+        if dcfg.admission_capacity is not None:
+            assert sim["shed_ticks"]          # capacity 1 must shed here
+        done, shed = set(sim["completion_ticks"]), set(sim["shed_ticks"])
+        assert done | shed == rids and not (done & shed)
+
+
+def test_disagg_config_validation_boundaries():
+    DisaggConfig(prefill_budget=1, handoff_bound=1, admission_capacity=1)
+    for bad in (dict(prefill_budget=0), dict(handoff_bound=0),
+                dict(admission_capacity=0), dict(starvation_age=-1)):
+        with pytest.raises(ValueError):
+            DisaggConfig(**bad)
+
+
+# ---------------------------------------------------------------------
+# Drain diagnostics: a wedged run is diagnosable from the exception
+# ---------------------------------------------------------------------
+
+def test_drain_error_carries_queue_diagnostics():
+    spec = make_scenario("steady", seed=0, slots=1, quick=True)
+    with pytest.raises(ScenarioDrainError) as ei:
+        simulate_batches(spec, max_ticks=2)
+    err = ei.value
+    assert err.name == "steady" and err.tick == 2
+    assert set(err.queues) == {"waiting", "pending"}
+    msg = str(err)
+    assert "queue depths" in msg and "oldest queued request age" in msg
+    assert "last-tick batch" in msg
+
+    with pytest.raises(ScenarioDrainError) as ei2:
+        simulate_disagg(spec, max_ticks=2)
+    assert set(ei2.value.queues) == {"waiting", "handoff", "pending"}
+
+
+# ---------------------------------------------------------------------
+# Chaos timelines
+# ---------------------------------------------------------------------
+
+def test_timeline_deterministic_sorted_and_complete():
+    a = make_chaos_timeline(4, horizon=30, rungs=["pallas", "scan"])
+    assert a == make_chaos_timeline(4, horizon=30, rungs=["pallas", "scan"])
+    assert a == sorted(a, key=lambda x: (x.tick, x.action))
+    acts = {x.action for x in a}
+    assert {"planner", "backend.pallas", "lane_cache.poison",
+            "lane_cache.scrub", "lane_cache.storm", "replan",
+            "handoff"} <= acts
+    assert any(x.action == "backend.pallas" and x.count == -1 for x in a)
+    # every storm is paired with a replan at the same tick, storm first
+    for x in a:
+        if x.action == "replan":
+            assert ChaosAction(x.tick, "lane_cache.storm", 0) in a
+
+
+def test_single_rung_timeline_has_no_persistent_burst():
+    c = make_chaos_timeline(4, horizon=30, rungs=["scan"])
+    assert not any(x.count < 0 for x in c)
+
+
+def test_baseline_timeline_is_the_neutral_shadow():
+    tl = make_chaos_timeline(9, horizon=24, rungs=["pallas", "scan"])
+    base = baseline_timeline(tl)
+    assert base and all(x.action in NEUTRAL_ACTIONS for x in base)
+    assert not any(x.action.startswith("backend.") for x in base)
+    assert [x for x in tl if x.action in NEUTRAL_ACTIONS] == base
+
+
+def test_chaos_action_record_roundtrip():
+    act = ChaosAction(3, "backend.mesh", -1, "note")
+    assert ChaosAction.from_record(json.loads(
+        json.dumps(act.to_record()))) == act
+
+
+# ---------------------------------------------------------------------
+# End to end: the byte-parity contract under a full fault schedule
+# ---------------------------------------------------------------------
+
+def _strip_chaos(trace: dict) -> str:
+    t = {k: v for k, v in trace.items() if k != "chaos"}
+    return json.dumps(t, sort_keys=True)
+
+
+@pytest.mark.skipif(not lane_scan.pallas_lane_supported(),
+                    reason="pallas lane kernel unsupported here")
+def test_chaos_run_byte_identical_to_healthy_baseline(small_lm):
+    """The tentpole contract: a serve run whose fault schedule trips the
+    breaker and steps the ladder down (pallas -> scan) completes the
+    same requests with a trace byte-identical to a healthy run driven by
+    the fault-free shadow timeline."""
+    cfg, params = small_lm
+    spec = make_scenario("chaos", seed=2, slots=4, quick=True)
+    horizon = max(a.step for a in spec.arrivals) + 1
+    tl = make_chaos_timeline(2, horizon=max(horizon, 8),
+                             rungs=["pallas", "scan"], scheduling=False)
+
+    engine.lane_cache_reset()
+    with engine.lane_backend_scope("pallas"):
+        faulted = run_chaos_scenario(cfg, params, _planner(),
+                                     scenario=spec, timeline=tl)
+    kinds = {e["kind"] for e in faulted["chaos"]["events"]}
+    assert {"inject", "fault", "retry", "degrade",
+            "trip", "skip", "detect"} <= kinds
+    assert "backend.pallas" in faulted["chaos"]["breaker"]["open"]
+    assert faulted["chaos"]["backoff_sleeps"]          # no real sleeps
+    assert faulted["chaos"]["injected"] > 0
+
+    faults.reset()
+    engine.lane_cache_reset()
+    baseline = run_chaos_scenario(cfg, params, _planner(), scenario=spec,
+                                  timeline=baseline_timeline(tl))
+    assert not baseline["chaos"]["injected"]
+    assert _strip_chaos(faulted) == _strip_chaos(baseline)
+
+
+def test_zero_request_chaos_run(small_lm):
+    cfg, params = small_lm
+    spec = ScenarioSpec(name="chaos", seed=0, slots=2, arrivals=())
+    trace = run_chaos_scenario(cfg, params, _planner(), scenario=spec)
+    assert trace["steps"] == 0 and trace["per_tick_batch"] == []
+    assert trace["chaos"]["timeline"]          # armed, nothing to hit
+    assert trace["controller"]["steps"] == 0
+
+
+# ---------------------------------------------------------------------
+# Golden chaos incident: pinned byte-exactly
+# ---------------------------------------------------------------------
+
+def _golden_chaos_trace(small_lm) -> dict:
+    cfg, params = small_lm
+    engine.configure_lane_devices(1)      # platform-independent ladder
+    engine.lane_cache_reset()
+    faults.reset()
+    spec = make_scenario(**GOLDEN_SCENARIO)
+    horizon = max(a.step for a in spec.arrivals) + 1
+    tl = make_chaos_timeline(GOLDEN_SCENARIO["seed"],
+                             horizon=max(horizon, 8), rungs=["scan"],
+                             scheduling=True)
+    dcfg = DisaggConfig(prefill_budget=2, handoff_bound=3,
+                        starvation_age=4, admission_capacity=6)
+    return run_chaos_scenario(
+        cfg, params, _planner(), scenario=spec, timeline=tl,
+        disagg=dcfg, slo=assign_slo(spec, 0.6))
+
+
+def test_golden_chaos_trace_exact(small_lm):
+    """One seeded incident — cache storms, forced replans, handoff
+    pressure, admission shedding — through the disagg cells, its full
+    trace INCLUDING the chaos record (timeline, event log, breaker
+    state, backoff sleeps) diffed exactly against the committed fixture.
+    Regenerate deliberately with ``python tests/test_chaos.py``."""
+    fixture = json.loads(GOLDEN.read_text())
+    current = json.loads(json.dumps(_golden_chaos_trace(small_lm)))
+    assert set(current) == set(fixture)
+    for key in fixture:
+        assert current[key] == fixture[key], f"golden chaos drift at {key}"
+
+
+def test_golden_chaos_trace_records_degradations():
+    """The committed incident record is self-contained: sheds and stalls
+    appear both in the structured event log and the disagg telemetry."""
+    fixture = json.loads(GOLDEN.read_text())
+    rec = fixture["chaos"]
+    kinds = [e["kind"] for e in rec["events"]]
+    assert "shed" in kinds and "stall" in kinds and "inject" in kinds
+    assert fixture["disagg"]["shed"]
+    shed_evs = [e for e in rec["events"] if e["kind"] == "shed"]
+    assert len(shed_evs) == len(fixture["disagg"]["shed"])
+    for ev in rec["events"]:
+        assert "tick" in ev               # every event is tick-tagged
+    # the embedded timeline round-trips through ChaosAction records
+    acts = [ChaosAction.from_record(a) for a in rec["timeline"]]
+    assert acts == sorted(acts, key=lambda a: (a.tick, a.action))
+    assert any(a.action == "handoff" for a in acts)
+
+
+if __name__ == "__main__":               # regenerate the committed fixture
+    cfg = smoke_config(ARCHS["granite-8b"])
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    GOLDEN.parent.mkdir(parents=True, exist_ok=True)
+    GOLDEN.write_text(json.dumps(_golden_chaos_trace((cfg, params)),
+                                 indent=1, sort_keys=True))
+    print(f"wrote {GOLDEN}")

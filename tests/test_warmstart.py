@@ -15,7 +15,7 @@ import sys
 import numpy as np
 import pytest
 
-from repro.core import engine, warmstart
+from repro.core import engine, faults, warmstart
 from repro.core.timing import DEFAULT_SYSTEM
 
 from test_engine import build_valid_stream, random_op_tuples
@@ -173,6 +173,97 @@ def test_malformed_payload_shapes_are_cold(tmp_path):
         with open(path, "wb") as f:
             pickle.dump(payload, f)
         assert warmstart.load_lane_snapshot(str(tmp_path)) == 0
+
+
+# ---------------------------------------------------------------------
+# Crash-mid-write: the previous snapshot must survive a dying writer
+# ---------------------------------------------------------------------
+
+def test_injected_crash_mid_write_preserves_previous_snapshot(tmp_path):
+    """A writer that dies after fsync but before the atomic rename (the
+    armed ``warmstart`` seam) leaves the previous snapshot intact and no
+    tmp litter behind."""
+    engine.resolve_lanes(_lanes(8), keys=_keys(), need_issue=False)
+    assert warmstart.save_lane_snapshot(str(tmp_path)) == 5
+
+    engine.resolve_lanes(_lanes(9), keys=[("v2", i) for i in range(5)],
+                         need_issue=False)
+    inj = faults.FaultInjector()
+    inj.arm("warmstart", count=1, message="crash mid-write")
+    with faults.fault_scope(inj):
+        with pytest.raises(faults.InjectedFault):
+            warmstart.save_lane_snapshot(str(tmp_path))
+
+    leftovers = [f for f in os.listdir(tmp_path) if f.endswith(".tmp")]
+    assert not leftovers, f"tmp files left behind: {leftovers}"
+    engine.lane_cache_reset()
+    assert warmstart.load_lane_snapshot(str(tmp_path)) == 5  # v1 intact
+
+
+def test_hard_kill_mid_write_preserves_previous_snapshot(tmp_path):
+    """The real thing: a separate interpreter is hard-killed (os._exit)
+    at the injection seam — after the tmp file is written and fsynced,
+    before ``os.replace``.  The parent must still load the previous
+    snapshot; a leftover tmp file is acceptable crash litter but must
+    never shadow the real snapshot."""
+    engine.resolve_lanes(_lanes(10), keys=_keys(), need_issue=False)
+    assert warmstart.save_lane_snapshot(str(tmp_path)) == 5
+    ref = engine.lane_cache_export()
+
+    child = (
+        "import os, sys\n"
+        "sys.path.insert(0, %r)\n"
+        "import numpy as np\n"
+        "from repro.core import engine, faults, warmstart\n"
+        "from repro.core.timing import DEFAULT_SYSTEM\n"
+        "from test_engine import build_valid_stream, random_op_tuples\n"
+        "rng = np.random.default_rng(11)\n"
+        "cyc = DEFAULT_SYSTEM.derive_cycles()\n"
+        "lanes = [(cyc, build_valid_stream(random_op_tuples(rng,"
+        " max_ops=30))) for _ in range(3)]\n"
+        "engine.resolve_lanes(lanes, keys=[('kill', i) for i in range(3)],"
+        " need_issue=False)\n"
+        "faults.maybe_fail = lambda site: os._exit(9)\n"
+        "warmstart.faults.maybe_fail = faults.maybe_fail\n"
+        "warmstart.save_lane_snapshot(sys.argv[1])\n"
+    ) % os.path.dirname(os.path.abspath(__file__))
+    src = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "src")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        [src] + ([env["PYTHONPATH"]] if env.get("PYTHONPATH") else []))
+    out = subprocess.run([sys.executable, "-c", child, str(tmp_path)],
+                         capture_output=True, text=True, env=env)
+    assert out.returncode == 9, out.stderr
+
+    engine.lane_cache_reset()
+    assert warmstart.load_lane_snapshot(str(tmp_path)) == 5
+    assert engine.lane_cache_export() == ref
+
+
+def test_save_warm_start_absorbs_failure(tmp_path, monkeypatch):
+    """A failing save is advisory: ``save_warm_start`` returns -1 and
+    records a structured ``fault`` event instead of raising."""
+    monkeypatch.setenv("REPRO_CACHE_DIR", str(tmp_path))
+    inj = faults.FaultInjector()
+    inj.arm("warmstart", count=1)
+    with faults.fault_scope(inj):
+        assert warmstart.save_warm_start() == -1
+    evs = [e for e in faults.events()
+           if e["site"] == "warmstart" and e["kind"] == "fault"]
+    assert evs and "snapshot save failed" in evs[0]["detail"]
+
+
+def test_rejected_snapshot_records_detect_event(tmp_path):
+    path = _saved_snapshot(tmp_path)
+    with open(path, "wb") as f:
+        f.write(b"garbage, not a pickle")
+    engine.lane_cache_reset()
+    faults.reset_events()
+    assert warmstart.load_lane_snapshot(str(tmp_path)) == 0
+    evs = [e for e in faults.events()
+           if e["site"] == "warmstart" and e["kind"] == "detect"]
+    assert evs and "cold start" in evs[0]["detail"]
 
 
 # ---------------------------------------------------------------------
