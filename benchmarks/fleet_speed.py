@@ -15,6 +15,12 @@ on/off, PIM + baseline points):
 * ``fleet/specs_*`` — the spec-lifted facade: a (4 SystemSpec variants x
   shapes) design grid as per-variant executors + per-point calls vs ONE
   heterogeneous ``run_many`` fleet.
+* ``fleet/specfam_*`` — the heterogeneous spec-family fleet
+  (``configs/specfam.py``: phone-class LP5X / server parts /
+  CXL-expander-like populations): per-family executors vs ONE batched
+  ``run_many`` (cycle counts asserted bit-identical), then each
+  family's offload frontier and speculative-decode economics as
+  per-population rows.
 * ``fleet/mesh_*`` — lane execution backends on the same prebuilt
   streams: the threaded per-device dispatch vs ONE ``shard_map``
   program per slab over a 1-D ``lanes`` mesh, at mesh sizes {1, 2, 4}
@@ -327,6 +333,61 @@ def main(quick: bool = False) -> dict:
     print(f"fleet/specs_speedup,{specs_batch_s*1e3:.1f},"
           f"{specs_loop_s/specs_batch_s:.1f}")
 
+    # Heterogeneous spec-family fleets: the configs/specfam.py
+    # populations (phone-class LP5X, server parts, a CXL-expander-like
+    # latency profile) as one design grid — per-family executors +
+    # per-point calls vs ONE batched run_many over the whole population,
+    # cycle counts asserted bit-identical.  Then each family's offload
+    # frontier and draft-model speculative-decode economics become
+    # per-population rows (cache lookups + arithmetic after a single
+    # plan_grid dispatch).
+    from repro.configs import ARCHS
+    from repro.configs.specfam import SPEC_FAMILIES
+    from repro.serving.offload import OffloadPlanner
+    fam_grid = [r for sp in SPEC_FAMILIES.values() for d in dims
+                for r in (GemvRequest.pim(BASE, d, PimDType.W8A8, spec=sp),
+                          GemvRequest.baseline(BASE, d, PimDType.W8A8,
+                                               spec=sp))]
+    fm = len(fam_grid)
+    PimExecutor().run_many(fam_grid)  # warm heterogeneous slab shapes
+
+    engine.lane_cache_clear()
+    t0 = time.perf_counter()
+    fam_loop = []
+    for sp in SPEC_FAMILIES.values():
+        ex_fam = PimExecutor(sp)
+        fam_loop += [ex_fam.run_gemv(r.H, r.W, r.dtype)
+                     if r.kind == "pim" else
+                     ex_fam.run_baseline(r.H, r.W, r.dtype)
+                     for r in fam_grid if r.spec == sp]
+    specfam_loop_s = time.perf_counter() - t0
+
+    engine.lane_cache_clear()
+    t0 = time.perf_counter()
+    fam_batch = PimExecutor().run_many(fam_grid)
+    specfam_batch_s = time.perf_counter() - t0
+
+    for a, b in zip(fam_loop, fam_batch):
+        assert a.cycles == b.cycles, (a.meta, a.cycles, b.cycles)
+
+    print(f"fleet/specfam_looped,{specfam_loop_s*1e6/fm:.1f},"
+          f"{fm/specfam_loop_s:.1f}")
+    print(f"fleet/specfam_batched,{specfam_batch_s*1e6/fm:.1f},"
+          f"{fm/specfam_batch_s:.1f}")
+    print(f"fleet/specfam_speedup,{specfam_batch_s*1e3:.1f},"
+          f"{specfam_loop_s/specfam_batch_s:.1f}")
+
+    fam_planner = OffloadPlanner(ARCHS["mamba2-130m"], PimSimulator())
+    fam_planner.plan_grid(list(SPEC_FAMILIES.values()))
+    specfam_spec_decode = {}
+    for fam_name, sp in SPEC_FAMILIES.items():
+        frontier = fam_planner.frontier(spec=sp)
+        sdrec = fam_planner.spec_decode_speedup(spec=sp)
+        specfam_spec_decode[fam_name] = sdrec["speedup"]
+        n_pim = sum(1 for b in frontier.values() if b > 1)
+        print(f"fleet/specfam_{fam_name},{n_pim}/{len(frontier)},"
+              f"{sdrec['speedup']:.2f}")
+
     # Serving replan loop: fresh planner per query (so the planner's own
     # plan cache cannot hide engine work), resolved-lane LRU off vs on.
     from repro.configs import ARCHS
@@ -543,6 +604,9 @@ def main(quick: bool = False) -> dict:
                               for m, s in mesh_row_s.items()},
                 sweep_speedup=sweep_loop_s / sweep_batch_s,
                 specs_speedup=specs_loop_s / specs_batch_s,
+                specfam_speedup=specfam_loop_s / specfam_batch_s,
+                specfam_families=list(SPEC_FAMILIES),
+                specfam_spec_decode=specfam_spec_decode,
                 serve_replan_speedup=replan_cold_s / replan_warm_s,
                 pallas_speedup=pallas_speedup,
                 coldstart_speedup=coldstart_speedup,

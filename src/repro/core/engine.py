@@ -660,6 +660,31 @@ def lane_cache_import(entries: Iterable[tuple]) -> int:
     return n
 
 
+def lane_cache_touch(pairs: Iterable[tuple]) -> int:
+    """Mark structurally-keyed lanes most-recently-used; returns hits.
+
+    ``pairs`` are ``(TimingCycles, structural key)`` — the identity a
+    planner hands :func:`resolve_lanes` via ``keys`` (byte-hash-keyed
+    entries cannot be addressed without their bytes and are not the use
+    case).  Present entries move to the MRU end of the lane LRU; absent
+    ones are ignored.  This is the eviction shield for *hot small-shape
+    lanes*: a speculative-decode serve touches its tiny draft-GEMV
+    lanes every tick, so capacity pressure from big heterogeneous spec
+    grids evicts cold sweep lanes instead of the lanes the next tick
+    needs.  Deliberately silent on the hit/miss counters — touching is
+    not engine work, and policies watching ``misses`` (sticky epochs)
+    must not see phantom activity.
+    """
+    n = 0
+    with _LANE_CACHE_LOCK:
+        for cyc, key in pairs:
+            ukey = (cyc, 0, key)
+            if ukey in _LANE_CACHE:
+                _LANE_CACHE.move_to_end(ukey)
+                n += 1
+    return n
+
+
 def _lane_cache_get(key, need_issue: bool):
     if _LANE_CACHE_MAX <= 0:
         return None

@@ -277,20 +277,28 @@ def pim_offload_report(arch: str, batches=(1, 2, 4, 8, 16),
     speedup curve over batch sizes.  With ``scenario`` the report also
     runs the adaptive offload controller closed-loop over that
     scenario's simulated occupancy trace (no model involved) and records
-    realized-vs-oracle policy telemetry.  With ``disagg`` the closed
+    realized-vs-oracle policy telemetry; the ``spec-decode`` scenario
+    instead drives the loop from ``simulate_spec_decode``'s occupancy
+    (acceptance-dependent slot dynamics) and records the draft/verify
+    accounting.  With ``disagg`` the closed
     loop instead runs over the disaggregated cell pair's decode
     occupancy (``simulate_disagg`` — bounded prefill/handoff, SLO-mixed
     admission, still model-free) and the record gains the handoff/SLO
-    scheduling telemetry.  Writes experiments/dryrun/pim/<arch>.json.
+    scheduling telemetry.  The report always closes with the
+    heterogeneous spec-family sweep (``configs/specfam.py``): one
+    ``plan_grid`` dispatch over the whole population, then each
+    family's offload frontier and speculative-decode economics.
+    Writes experiments/dryrun/pim/<arch>.json.
     """
     import dataclasses as _dc
 
+    from repro.configs.specfam import SPEC_FAMILIES
     from repro.core.timing import DEFAULT_SYSTEM, LpddrTimings, PimSpec, \
         SystemSpec
     from repro.serving.offload import OffloadPlanner
-    from repro.serving.scenarios import DisaggConfig, assign_slo, \
-        make_scenario, occupancy_trace, run_policy_over_trace, \
-        simulate_disagg
+    from repro.serving.scenarios import DisaggConfig, SpecDecodeConfig, \
+        assign_slo, make_scenario, occupancy_trace, resolve_scenario, \
+        run_policy_over_trace, simulate_disagg, simulate_spec_decode
 
     variants = {
         "lp5x-9600": DEFAULT_SYSTEM,
@@ -313,9 +321,23 @@ def pim_offload_report(arch: str, batches=(1, 2, 4, 8, 16),
                             for b in batches},
         )
     if scenario:
+        scenario = resolve_scenario(scenario)
         sc = make_scenario(scenario, seed=0, quick=True)
-        controller = run_policy_over_trace(planner, policy,
-                                           occupancy_trace(sc))
+        if scenario == "spec-decode":
+            sd = SpecDecodeConfig()
+            sim = simulate_spec_decode(sc, sd)
+            occ = [b for b in sim["per_tick_batch"] if b > 0]
+            drafted = sum(sim["drafted"].values())
+            accepted = sum(sim["accepted"].values())
+            rec["spec_decode"] = dict(
+                config=sd.to_record(), drafted=drafted, accepted=accepted,
+                wasted=drafted - accepted,
+                rounds=sum(sim["rounds"].values()),
+                model=planner.spec_decode_speedup(
+                    draft_len=sd.draft_len, acceptance=sd.acceptance))
+        else:
+            occ = occupancy_trace(sc)
+        controller = run_policy_over_trace(planner, policy, occ)
         rec["serving_policy"] = dict(scenario=scenario, policy=policy,
                                      report=controller.report())
         if disagg:
@@ -335,6 +357,14 @@ def pim_offload_report(arch: str, batches=(1, 2, 4, 8, 16),
                 max_handoff_depth=sim["max_handoff_depth"],
                 decode_steps=len(dec),
                 report=dctl.report())
+    # Heterogeneous spec-family sweep: the whole population's decisions
+    # come from ONE batched grid dispatch; frontiers and spec-decode
+    # economics per family are then cache lookups + arithmetic.
+    planner.plan_grid(list(SPEC_FAMILIES.values()))
+    rec["spec_families"] = {
+        name: dict(frontier=planner.frontier(spec=s),
+                   spec_decode=planner.spec_decode_speedup(spec=s))
+        for name, s in SPEC_FAMILIES.items()}
     out_dir = OUT_DIR / "pim"
     out_dir.mkdir(parents=True, exist_ok=True)
     (out_dir / f"{arch}.json").write_text(json.dumps(rec, indent=1))
@@ -368,13 +398,13 @@ def main() -> None:
     from repro.serving.policy import POLICIES
     from repro.serving.scenarios import SCENARIOS
     ap.add_argument("--scenario", default=None,
-                    choices=sorted(SCENARIOS),
                     help="with --pim: also run the adaptive offload "
                          "controller closed-loop over this scenario's "
-                         "simulated occupancy trace")
+                         "simulated occupancy trace "
+                         f"(one of {sorted(SCENARIOS)}; underscores ok)")
     ap.add_argument("--policy", default="per-step",
-                    choices=sorted(POLICIES),
-                    help="with --pim --scenario: offload control policy")
+                    help="with --pim --scenario: offload control policy "
+                         f"(one of {sorted(POLICIES)}; underscores ok)")
     ap.add_argument("--disagg", action="store_true",
                     help="with --pim: run the closed loop over the "
                          "disaggregated cell pair's decode occupancy "
@@ -389,6 +419,16 @@ def main() -> None:
                          "cache + resolved-lane snapshot); also via "
                          "REPRO_CACHE_DIR")
     args = ap.parse_args()
+    # Registry-backed validation (underscore aliases resolve; unknown
+    # names fail with the full menu) instead of frozen argparse choices.
+    from repro.serving.policy import resolve_policy
+    from repro.serving.scenarios import resolve_scenario
+    try:
+        if args.scenario:
+            args.scenario = resolve_scenario(args.scenario)
+        args.policy = resolve_policy(args.policy)
+    except ValueError as e:
+        ap.error(str(e))
 
     from repro.core import warmstart
     warm = warmstart.enable_warm_start(args.cache_dir)
@@ -429,6 +469,19 @@ def main() -> None:
                       f"{rep['efficiency']:.3f}), "
                       f"{rep['planner_queries']} queries over "
                       f"{rep['steps']} steps", flush=True)
+            if "spec_decode" in rec:
+                sdr = rec["spec_decode"]
+                print(f"[pim] {arch}: spec-decode "
+                      f"{sdr['accepted']}/{sdr['drafted']} drafts "
+                      f"accepted, model "
+                      f"{sdr['model']['speedup']:.2f}x/token", flush=True)
+            for fam, frec in rec["spec_families"].items():
+                n_pim = sum(1 for b in frec["frontier"].values() if b > 1)
+                print(f"[pim] {arch}: family {fam}: {n_pim}/"
+                      f"{len(frec['frontier'])} sites PIM-favored, "
+                      f"spec-decode "
+                      f"{frec['spec_decode']['speedup']:.2f}x/token",
+                      flush=True)
             if "disagg" in rec:
                 drep = rec["disagg"]["report"]
                 print(f"[pim] {arch}: disagg cells x {args.policy}: eff "

@@ -41,9 +41,11 @@ from repro.core.pimsim import PimSimulator
 from repro.models import model as M
 from repro.serving.engine import Request, ServingEngine
 from repro.serving.offload import OffloadPlanner
-from repro.serving.policy import POLICIES
-from repro.serving.scenarios import (SCENARIOS, DisaggConfig, assign_slo,
-                                     make_scenario, run_scenario)
+from repro.serving.policy import POLICIES, resolve_policy
+from repro.serving.scenarios import (SCENARIOS, DisaggConfig,
+                                     SpecDecodeConfig, assign_slo,
+                                     make_scenario, resolve_scenario,
+                                     run_scenario)
 
 
 def _disagg_config(args) -> "DisaggConfig | bool":
@@ -87,17 +89,23 @@ def run_scenario_mode(args, full_cfg, cfg, params, mesh=None,
     disagg = _disagg_config(args)
     slo = (assign_slo(spec, frac_latency=args.slo)
            if args.slo is not None else None)
+    spec_decode = (SpecDecodeConfig(draft_len=args.draft_len,
+                                    acceptance=args.acceptance,
+                                    seed=args.seed)
+                   if args.scenario == "spec-decode" else None)
     t0 = time.perf_counter()
     if args.chaos:
         from repro.serving.chaos import run_chaos_scenario
         trace = run_chaos_scenario(cfg, params, planner, scenario=spec,
                                    seed=args.faults, policy=args.policy,
                                    fence=args.fence, mesh=mesh,
-                                   disagg=disagg, slo=slo)
+                                   disagg=disagg, slo=slo,
+                                   spec_decode=spec_decode)
     else:
         trace = run_scenario(spec, cfg, params, planner,
                              policy=args.policy, fence=args.fence,
-                             mesh=mesh, disagg=disagg, slo=slo)
+                             mesh=mesh, disagg=disagg, slo=slo,
+                             spec_decode=spec_decode)
     dt = time.perf_counter() - t0
     rep = trace["controller"]
     mode = "disagg cells" if disagg else "monolithic engine"
@@ -115,8 +123,29 @@ def run_scenario_mode(args, full_cfg, cfg, params, mesh=None,
           f"replans {rep['replans']}")
     if disagg:
         _print_disagg_report(trace["disagg"])
+    if "spec_decode" in trace:
+        _print_spec_decode_report(trace["spec_decode"], planner, args)
     if args.chaos:
         _print_chaos_report(trace["chaos"])
+
+
+def _print_spec_decode_report(rec: dict, planner, args) -> None:
+    """Draft/verify accounting + a parseable ``serve/spec_decode`` row
+    the CI job greps."""
+    drafted = rec["drafted"]
+    rate = rec["accepted"] / drafted if drafted else 0.0
+    model = planner.spec_decode_speedup(draft_len=args.draft_len,
+                                        acceptance=args.acceptance,
+                                        fence=args.fence)
+    print(f"  speculative decode   : {rec['rounds']} rounds, "
+          f"{rec['accepted']}/{drafted} drafts accepted "
+          f"({rate:.2f}), {rec['wasted']} wasted, "
+          f"{rec['substeps']} verify sub-steps")
+    print(f"  draft-lane model     : {model['speedup']:.3f}x per-token vs "
+          f"vanilla decode ({model['tokens_per_round']:.2f} tok/round)")
+    print(f"serve/spec_decode,rounds={rec['rounds']},"
+          f"drafted={drafted},accepted={rec['accepted']},"
+          f"wasted={rec['wasted']},substeps={rec['substeps']}", flush=True)
 
 
 def _print_chaos_report(rec: dict) -> None:
@@ -148,12 +177,19 @@ def main() -> None:
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=8)
     ap.add_argument("--fence", action="store_true", default=True)
-    ap.add_argument("--scenario", choices=sorted(SCENARIOS), default=None,
+    ap.add_argument("--scenario", default=None,
                     help="drive a seeded workload scenario end to end "
-                         "under an adaptive offload controller")
-    ap.add_argument("--policy", choices=sorted(POLICIES),
-                    default="per-step",
-                    help="offload control policy for --scenario runs")
+                         "under an adaptive offload controller "
+                         f"(one of {sorted(SCENARIOS)}; underscores ok)")
+    ap.add_argument("--policy", default="per-step",
+                    help="offload control policy for --scenario runs "
+                         f"(one of {sorted(POLICIES)}; underscores ok)")
+    ap.add_argument("--draft-len", type=int, default=4, metavar="L",
+                    help="with --scenario spec-decode: speculative draft "
+                         "length per round")
+    ap.add_argument("--acceptance", type=float, default=0.7, metavar="P",
+                    help="with --scenario spec-decode: per-token draft "
+                         "acceptance probability (seeded model)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--quick", action="store_true",
                     help="smaller scenario (CI smoke)")
@@ -202,6 +238,15 @@ def main() -> None:
     args = ap.parse_args()
     if args.chaos and not args.scenario:
         args.scenario = "chaos"
+    # Registry-backed validation instead of a frozen argparse ``choices``
+    # list: underscore aliases resolve (``spec_decode`` works) and
+    # unknown names fail with the full menu.
+    try:
+        if args.scenario:
+            args.scenario = resolve_scenario(args.scenario)
+        args.policy = resolve_policy(args.policy)
+    except ValueError as e:
+        ap.error(str(e))
 
     t_start = time.perf_counter()
     lane_engine.configure_lane_backend(args.lane_backend)

@@ -246,6 +246,27 @@ class PimExecutor:
                                        stream_keys=gs.stream_keys, gs=gs))
         return out
 
+    def touch_many(self, reqs: Sequence[GemvRequest]) -> int:
+        """Pin the requests' resolved lanes at the MRU end of the lane
+        LRU (``engine.lane_cache_touch``); returns lanes found warm.
+
+        Planning is cheap numpy stream synthesis (and the layouts /
+        programs sit in the shared ``spec_context`` LRU), so this never
+        dispatches the engine: absent lanes stay absent until something
+        actually resolves them.  The speculative-decode serve loop uses
+        it every tick to shield its hot small-shape draft lanes from
+        eviction by large heterogeneous grid resolves.
+        """
+        reqs = [r.resolved(self.default_spec) for r in reqs]
+        uniq: dict[tuple, GemvRequest] = {}
+        for r in reqs:
+            uniq.setdefault(r.key, r)
+        pairs = []
+        for p in self.plan_many(uniq.values()):
+            pairs.extend((p.ctx.cyc, k) for k in p.stream_keys
+                         if k is not None)
+        return engine.lane_cache_touch(pairs)
+
     def run_many(self, reqs: Sequence[GemvRequest]) -> list[PimResult]:
         """Resolve many requests through ONE batched engine call.
 

@@ -262,7 +262,7 @@ class DecodeCell:
     def __init__(self, cfg: ArchConfig, params, slots: int, max_seq: int,
                  planner: Optional[OffloadPlanner] = None,
                  controller: Optional[OffloadController] = None,
-                 step_telemetry: bool = False):
+                 step_telemetry: bool = False, spec_decode=None):
         assert cfg.input_mode == "tokens", "cells serve token models"
         self.cfg, self.params = cfg, params
         self.slots = slots
@@ -281,6 +281,14 @@ class DecodeCell:
         self.step_speedups: list[dict] = []
         self.admit_ticks: dict[int, int] = {}
         self.completions: dict[int, int] = {}
+        # Speculative decoding: same seeded accept/advance schedule as
+        # the monolithic engine (scenarios.SpecDecodeConfig or None).
+        self.spec_decode = spec_decode
+        self.spec_rounds: dict[int, int] = {}
+        self.spec_drafted: dict[int, int] = {}
+        self.spec_accepted: dict[int, int] = {}
+        self.spec_advance: list[int] = []
+        self.spec_substeps: list[int] = []
         self._decode = jax.jit(
             lambda p, c, t, pos: M.decode_step(cfg, p, c, t, pos))
 
@@ -311,24 +319,27 @@ class DecodeCell:
             return 0
         self.batch_occupancy[len(act)] = \
             self.batch_occupancy.get(len(act), 0) + 1
-        tokens = np.zeros((self.slots, 1), dtype=np.int32)
-        for i in act:
-            tokens[i, 0] = self.active[i].out[-1]
-        pos = jnp.asarray(self.pos, jnp.int32)
-        logits, self.cache = self._decode(self.params, self.cache,
-                                          jnp.asarray(tokens), pos)
-        next_tok = np.asarray(jnp.argmax(logits, axis=-1)).reshape(-1)
-        for i in act:
-            req = self.active[i]
-            tok = int(next_tok[i])
-            req.out.append(tok)
-            self.pos[i] += 1
-            self.stats["tokens"] += 1
-            if (tok == req.eos or len(req.out) >= req.max_new
-                    or self.pos[i] >= self.max_seq - 1):
-                req.done = True
-                self.active[i] = None
-                self.completions[req.rid] = tick
+        if self.spec_decode is not None:
+            self._spec_round(tick, act)
+        else:
+            tokens = np.zeros((self.slots, 1), dtype=np.int32)
+            for i in act:
+                tokens[i, 0] = self.active[i].out[-1]
+            pos = jnp.asarray(self.pos, jnp.int32)
+            logits, self.cache = self._decode(self.params, self.cache,
+                                              jnp.asarray(tokens), pos)
+            next_tok = np.asarray(jnp.argmax(logits, axis=-1)).reshape(-1)
+            for i in act:
+                req = self.active[i]
+                tok = int(next_tok[i])
+                req.out.append(tok)
+                self.pos[i] += 1
+                self.stats["tokens"] += 1
+                if (tok == req.eos or len(req.out) >= req.max_new
+                        or self.pos[i] >= self.max_seq - 1):
+                    req.done = True
+                    self.active[i] = None
+                    self.completions[req.rid] = tick
         self.step_batches.append(len(act))
         if self.controller is not None:
             self.controller.observe(len(act))
@@ -339,6 +350,56 @@ class DecodeCell:
                                            speedup=tel["speedup"]))
         self.stats["steps"] += 1
         return len(act)
+
+    def _spec_round(self, tick: int, act: list[int]) -> None:
+        """One speculative round per active slot — semantics identical
+        to ``ServingEngine._spec_round`` (the differential battery
+        holds the two implementations and the model-free mirror
+        together)."""
+        sd = self.spec_decode
+        adv: dict[int, int] = {}
+        for i in act:
+            req = self.active[i]
+            rem = max(1, req.max_new - len(req.out))
+            a, drf, acc = sd.advance(req.rid,
+                                     self.spec_rounds.get(req.rid, 0),
+                                     rem)
+            self.spec_rounds[req.rid] = \
+                self.spec_rounds.get(req.rid, 0) + 1
+            self.spec_drafted[req.rid] = \
+                self.spec_drafted.get(req.rid, 0) + drf
+            self.spec_accepted[req.rid] = \
+                self.spec_accepted.get(req.rid, 0) + acc
+            adv[i] = a
+        nsub = max(adv.values())
+        advanced = 0
+        for s in range(nsub):
+            live = [i for i in act
+                    if s < adv[i] and self.active[i] is not None]
+            if not live:
+                break
+            tokens = np.zeros((self.slots, 1), dtype=np.int32)
+            for i in act:
+                if self.active[i] is not None:
+                    tokens[i, 0] = self.active[i].out[-1]
+            pos = jnp.asarray(self.pos, jnp.int32)
+            logits, self.cache = self._decode(self.params, self.cache,
+                                              jnp.asarray(tokens), pos)
+            next_tok = np.asarray(jnp.argmax(logits, axis=-1)).reshape(-1)
+            for i in live:
+                req = self.active[i]
+                tok = int(next_tok[i])
+                req.out.append(tok)
+                self.pos[i] += 1
+                self.stats["tokens"] += 1
+                advanced += 1
+                if (tok == req.eos or len(req.out) >= req.max_new
+                        or self.pos[i] >= self.max_seq - 1):
+                    req.done = True
+                    self.active[i] = None
+                    self.completions[req.rid] = tick
+        self.spec_advance.append(advanced)
+        self.spec_substeps.append(nsub)
 
 
 class DisaggServingEngine:
@@ -359,7 +420,7 @@ class DisaggServingEngine:
                  planner: Optional[OffloadPlanner] = None,
                  controller: Optional[OffloadController] = None,
                  prefill_controller: Optional[OffloadController] = None,
-                 step_telemetry: bool = False):
+                 step_telemetry: bool = False, spec_decode=None):
         self.disagg = disagg or DisaggConfig.mirror()
         self.handoff = KVHandoffQueue(self.disagg.handoff_bound)
         self.prefill_cell = PrefillCell(
@@ -370,7 +431,8 @@ class DisaggServingEngine:
         self.decode_cell = DecodeCell(cfg, params, slots, max_seq,
                                       planner=planner,
                                       controller=controller,
-                                      step_telemetry=step_telemetry)
+                                      step_telemetry=step_telemetry,
+                                      spec_decode=spec_decode)
         self.ticks = 0
 
     # -- ServingEngine-compatible views --------------------------------
@@ -406,6 +468,18 @@ class DisaggServingEngine:
 
     def submit(self, req: Request, slo: str = SLO_LATENCY) -> None:
         self.prefill_cell.submit(req, slo, self.ticks)
+
+    def spec_report(self) -> dict:
+        """Aggregate speculative telemetry — the decode cell's, in the
+        monolithic engine's ``spec_report`` shape."""
+        dec = self.decode_cell
+        drafted = sum(dec.spec_drafted.values())
+        accepted = sum(dec.spec_accepted.values())
+        return dict(rounds=sum(dec.spec_rounds.values()),
+                    drafted=drafted, accepted=accepted,
+                    wasted=drafted - accepted,
+                    substeps=sum(dec.spec_substeps),
+                    per_tick_advance=list(dec.spec_advance))
 
     def step(self) -> bool:
         """One tick: prefill → handoff admission → batched decode.

@@ -178,6 +178,7 @@ def run_chaos_scenario(cfg, params, planner,
                        timeline: "list[ChaosAction] | None" = None,
                        breaker_threshold: int = 3, retries: int = 1,
                        mesh=None, disagg=False, slo=None,
+                       spec_decode=None,
                        policy_kw: dict | None = None) -> dict:
     """Serve a scenario under a seeded fault timeline; return the trace.
 
@@ -217,7 +218,7 @@ def run_chaos_scenario(cfg, params, planner,
                     spec, cfg, params, planner, policy=policy,
                     fence=fence, policy_kw=policy_kw,
                     mesh=engine.lane_mesh(), disagg=disagg, slo=slo,
-                    on_tick=on_tick)
+                    spec_decode=spec_decode, on_tick=on_tick)
         finally:
             faults.set_tick(None)
     trace["chaos"] = dict(

@@ -9,6 +9,22 @@ takes over — continuous batching, the production serving pattern.
 The engine also carries the PIM telemetry: per decode step it asks the
 OffloadPlanner what the step would cost on a host-only vs PIM-offloaded
 LPDDR5X system (the paper's motivating use case: on-device LLM decode).
+
+Speculative decoding (``spec_decode=``, a
+``scenarios.SpecDecodeConfig``): each serve tick runs one draft/verify
+*round* per active slot instead of a single decode step.  The seeded
+config decides how many draft tokens each request accepts this round
+(keyed per ``(rid, round)``, so the schedule is independent of slot
+order and identical to the model-free ``simulate_spec_decode`` mirror);
+the engine realizes an advance of ``k + 1`` tokens as that many batched
+decode sub-steps on the real target model — greedy speculative decoding
+is output-identical to greedy vanilla decode, so the token streams stay
+byte-equal to a vanilla run and the differential battery asserts it.
+Slots whose round is shorter than the tick's longest ride along masked:
+they feed their last token at an un-advanced position and their logits
+are discarded; the garbage cache write at that position is overwritten
+by their next genuine sub-step before anything reads it (the same
+precedent as inactive slots decoding token 0).
 """
 from __future__ import annotations
 
@@ -39,7 +55,8 @@ class ServingEngine:
     def __init__(self, cfg: ArchConfig, params, slots: int = 4,
                  max_seq: int = 256, planner: Optional[OffloadPlanner]
                  = None, step_telemetry: bool = False,
-                 controller: Optional[OffloadController] = None):
+                 controller: Optional[OffloadController] = None,
+                 spec_decode=None):
         assert cfg.input_mode == "tokens", "engine serves token models"
         self.cfg, self.params = cfg, params
         self.slots = slots
@@ -73,6 +90,16 @@ class ServingEngine:
         # arithmetic over the cached offload decisions.
         self.step_telemetry = step_telemetry
         self.step_speedups: list[dict] = []
+        # Speculative decoding: the seeded accept/advance schedule
+        # (duck-typed — scenarios.SpecDecodeConfig; None = vanilla) plus
+        # per-request round counters and the per-tick advance telemetry
+        # the mirror parity battery diffs.
+        self.spec_decode = spec_decode
+        self.spec_rounds: dict[int, int] = {}
+        self.spec_drafted: dict[int, int] = {}
+        self.spec_accepted: dict[int, int] = {}
+        self.spec_advance: list[int] = []
+        self.spec_substeps: list[int] = []
 
         self._decode = jax.jit(
             lambda p, c, t, pos: M.decode_step(cfg, p, c, t, pos))
@@ -117,27 +144,30 @@ class ServingEngine:
             return False
         self.batch_occupancy[len(act)] = \
             self.batch_occupancy.get(len(act), 0) + 1
-        tokens = np.zeros((self.slots, 1), dtype=np.int32)
-        for i in act:
-            tokens[i, 0] = self.active[i].out[-1]
-        # one position per slot (ragged decode positions)
-        pos = jnp.asarray(self.pos, jnp.int32)
-        logits, self.cache = self._decode(self.params, self.cache,
-                                          jnp.asarray(tokens), pos)
-        # one argmax over the whole batch on device, one host transfer —
-        # not a device->host sync per active slot
-        next_tok = np.asarray(jnp.argmax(logits, axis=-1)).reshape(-1)
-        for i in act:
-            req = self.active[i]
-            tok = int(next_tok[i])
-            req.out.append(tok)
-            self.pos[i] += 1
-            self.stats["tokens"] += 1
-            if (tok == req.eos or len(req.out) >= req.max_new
-                    or self.pos[i] >= self.max_seq - 1):
-                req.done = True
-                self.active[i] = None
-                self.completions[req.rid] = tick
+        if self.spec_decode is not None:
+            self._spec_round(tick, act)
+        else:
+            tokens = np.zeros((self.slots, 1), dtype=np.int32)
+            for i in act:
+                tokens[i, 0] = self.active[i].out[-1]
+            # one position per slot (ragged decode positions)
+            pos = jnp.asarray(self.pos, jnp.int32)
+            logits, self.cache = self._decode(self.params, self.cache,
+                                              jnp.asarray(tokens), pos)
+            # one argmax over the whole batch on device, one host
+            # transfer — not a device->host sync per active slot
+            next_tok = np.asarray(jnp.argmax(logits, axis=-1)).reshape(-1)
+            for i in act:
+                req = self.active[i]
+                tok = int(next_tok[i])
+                req.out.append(tok)
+                self.pos[i] += 1
+                self.stats["tokens"] += 1
+                if (tok == req.eos or len(req.out) >= req.max_new
+                        or self.pos[i] >= self.max_seq - 1):
+                    req.done = True
+                    self.active[i] = None
+                    self.completions[req.rid] = tick
         self.step_batches.append(len(act))
         if self.controller is not None:
             self.controller.observe(len(act))
@@ -148,6 +178,72 @@ class ServingEngine:
                                            speedup=tel["speedup"]))
         self.stats["steps"] += 1
         return True
+
+    def _spec_round(self, tick: int, act: list[int]) -> None:
+        """One speculative round per active slot, as batched sub-steps.
+
+        The seeded schedule fixes each slot's advance up front; the
+        tick then runs ``max(advance)`` batched decode sub-steps, each
+        slot participating genuinely for its own first ``advance`` of
+        them and riding along masked afterwards.  Each genuine sub-step
+        is bit-identical to a vanilla decode step for that slot (the
+        model is per-slot independent), so token streams match vanilla.
+        """
+        sd = self.spec_decode
+        adv: dict[int, int] = {}
+        for i in act:
+            req = self.active[i]
+            rem = max(1, req.max_new - len(req.out))
+            a, drf, acc = sd.advance(req.rid,
+                                     self.spec_rounds.get(req.rid, 0),
+                                     rem)
+            self.spec_rounds[req.rid] = \
+                self.spec_rounds.get(req.rid, 0) + 1
+            self.spec_drafted[req.rid] = \
+                self.spec_drafted.get(req.rid, 0) + drf
+            self.spec_accepted[req.rid] = \
+                self.spec_accepted.get(req.rid, 0) + acc
+            adv[i] = a
+        nsub = max(adv.values())
+        advanced = 0
+        for s in range(nsub):
+            live = [i for i in act
+                    if s < adv[i] and self.active[i] is not None]
+            if not live:
+                break
+            tokens = np.zeros((self.slots, 1), dtype=np.int32)
+            for i in act:
+                if self.active[i] is not None:
+                    tokens[i, 0] = self.active[i].out[-1]
+            pos = jnp.asarray(self.pos, jnp.int32)
+            logits, self.cache = self._decode(self.params, self.cache,
+                                              jnp.asarray(tokens), pos)
+            next_tok = np.asarray(jnp.argmax(logits, axis=-1)).reshape(-1)
+            for i in live:
+                req = self.active[i]
+                tok = int(next_tok[i])
+                req.out.append(tok)
+                self.pos[i] += 1
+                self.stats["tokens"] += 1
+                advanced += 1
+                if (tok == req.eos or len(req.out) >= req.max_new
+                        or self.pos[i] >= self.max_seq - 1):
+                    req.done = True
+                    self.active[i] = None
+                    self.completions[req.rid] = tick
+        self.spec_advance.append(advanced)
+        self.spec_substeps.append(nsub)
+
+    def spec_report(self) -> dict:
+        """Aggregate speculative telemetry (all zeros when vanilla or
+        nothing ran — the neutral-summary contract)."""
+        drafted = sum(self.spec_drafted.values())
+        accepted = sum(self.spec_accepted.values())
+        return dict(rounds=sum(self.spec_rounds.values()),
+                    drafted=drafted, accepted=accepted,
+                    wasted=drafted - accepted,
+                    substeps=sum(self.spec_substeps),
+                    per_tick_advance=list(self.spec_advance))
 
     def run(self, max_steps: int = 1000) -> dict:
         while (any(self.active) or self.waiting) and max_steps > 0:

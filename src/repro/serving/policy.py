@@ -179,11 +179,24 @@ POLICIES = {
 }
 
 
+def resolve_policy(name: str) -> str:
+    """Canonicalize a policy name or raise listing every valid one.
+
+    The :func:`~repro.serving.scenarios.resolve_scenario` analogue:
+    CLI-friendly underscore aliases map to the registry's dashed names
+    (``per_step`` → ``per-step``) and unknown names fail with the full
+    menu at validation time — the launchers route ``--policy`` through
+    this instead of a frozen argparse ``choices`` list.
+    """
+    cand = str(name).replace("_", "-")
+    if cand in POLICIES:
+        return cand
+    raise ValueError(f"unknown offload policy {name!r}; "
+                     f"choose from {sorted(POLICIES)}")
+
+
 def make_policy(name: str, **kw) -> OffloadPolicy:
-    if name not in POLICIES:
-        raise ValueError(f"unknown offload policy {name!r}; "
-                         f"choose from {sorted(POLICIES)}")
-    return POLICIES[name](**kw)
+    return POLICIES[resolve_policy(name)](**kw)
 
 
 @dataclasses.dataclass

@@ -18,6 +18,11 @@ survive:
                       the arrival schedule the fault-injection harness
                       (``serving/chaos.py``) composes fault timelines
                       over.
+* ``spec-decode``   — small prompts with long decode budgets, the
+                      draft/verify speculative regime: served with a
+                      :class:`SpecDecodeConfig`, acceptance-dependent
+                      multi-token advances swing completion times and
+                      occupancy in ways no fixed-budget schedule does.
 
 ``simulate_batches`` mirrors :class:`ServingEngine`'s admission and
 completion semantics exactly (requests finish on their decode budget,
@@ -27,11 +32,16 @@ dry-run closed loop and the property tests drive.  ``simulate_disagg``
 is the same model-free mirror for the disaggregated prefill/decode
 cell pair (``serving/cells.py``): SLO-classed admission
 (``_admission_pick`` is THE order spec), budgeted prefill, a bounded
-KV-handoff queue and continuous-batching decode.  ``run_scenario``
+KV-handoff queue and continuous-batching decode.
+``simulate_spec_decode`` is the mirror for speculative serving: the
+seeded accept/advance round math in :class:`SpecDecodeConfig` is THE
+spec both it and the real engines realize, keyed per (request, round)
+so it is independent of slot processing order.  ``run_scenario``
 drives the real engine end to end (model decode included, monolithic
-or ``disagg=``) and emits a replayable trace record; one bursty trace
-per engine shape is pinned byte-exactly in
-``tests/golden/serve_trace.json`` / ``tests/golden/disagg_trace.json``.
+or ``disagg=``, vanilla or ``spec_decode=``) and emits a replayable
+trace record; one bursty trace per engine shape is pinned byte-exactly
+in ``tests/golden/serve_trace.json`` / ``tests/golden/disagg_trace.json``
+/ ``tests/golden/spec_decode_trace.json``.
 """
 from __future__ import annotations
 
@@ -180,6 +190,19 @@ def _chaos(rng, slots: int, quick: bool):
     return raw
 
 
+def _spec_decode(rng, slots: int, quick: bool):
+    # The draft/verify regime: small prompts, long decode budgets (the
+    # shapes speculative decoding pays for), paced so acceptance-
+    # dependent completion swings push the occupancy back and forth
+    # across the offload crossover batch.
+    horizon = 12 if quick else 36
+    raw = []
+    for t in range(0, horizon, 2):
+        for _ in range(int(rng.integers(1, 3))):
+            raw.append((t, rng.integers(4, 10), rng.integers(8, 25)))
+    return raw
+
+
 SCENARIOS = {
     "steady": _steady,
     "bursty": _bursty,
@@ -187,16 +210,31 @@ SCENARIOS = {
     "prefill-heavy": _prefill_heavy,
     "drain-refill": _drain_refill,
     "chaos": _chaos,
+    "spec-decode": _spec_decode,
 }
+
+
+def resolve_scenario(name: str) -> str:
+    """Canonicalize a scenario name or raise listing every valid one.
+
+    CLI-friendly underscore aliases map to the registry's dashed names
+    (``spec_decode`` → ``spec-decode``), and unknown names fail with
+    the full menu at validation time instead of surfacing later as a
+    bare ``KeyError``.  The launchers validate ``--scenario`` through
+    this instead of a frozen argparse ``choices`` list.
+    """
+    cand = str(name).replace("_", "-")
+    if cand in SCENARIOS:
+        return cand
+    raise ValueError(f"unknown scenario {name!r}; "
+                     f"choose from {sorted(SCENARIOS)}")
 
 
 def make_scenario(name: str, seed: int = 0, slots: int = 8,
                   quick: bool = False) -> ScenarioSpec:
     """Build a deterministic scenario: same (name, seed, slots, quick)
     always yields the identical arrival schedule."""
-    if name not in SCENARIOS:
-        raise ValueError(f"unknown scenario {name!r}; "
-                         f"choose from {sorted(SCENARIOS)}")
+    name = resolve_scenario(name)
     rng = np.random.default_rng(seed)
     return _pack(name, seed, slots, SCENARIOS[name](rng, slots, quick))
 
@@ -248,6 +286,150 @@ def simulate_batches(spec: ScenarioSpec, max_ticks: int = 100_000
 def occupancy_trace(spec: ScenarioSpec) -> list[int]:
     """The non-idle batch sequence — what an offload policy observes."""
     return [b for b in simulate_batches(spec) if b > 0]
+
+
+# ---------------------------------------------------------------------
+# Speculative decoding: the seeded accept/advance round math (THE spec)
+# ---------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class SpecDecodeConfig:
+    """Scheduling spec of the draft/verify speculative-decode loop.
+
+    Per serve tick, every active request runs one *round*: it drafts
+    ``drafted = min(draft_len, remaining - 1)`` tokens (never drafting
+    past its decode budget), a seeded leading-prefix acceptance draw
+    accepts ``k <= drafted`` of them, and the verify step contributes
+    one token unconditionally — so the request advances ``k + 1``
+    tokens and wastes ``drafted - k`` draft positions.  Consequences
+    that hold *by construction* (the property suite pins them):
+
+    * token conservation — a request's advances sum exactly to its
+      ``decode_steps()`` budget, accepted or not;
+    * ``acceptance=0`` advances 1 token per tick: the schedule
+      degenerates to vanilla decode, tick-exactly equal to
+      :func:`simulate_batches`;
+    * ``acceptance=1`` accepts every drafted token: nothing is ever
+      re-decoded (``wasted == 0``).
+
+    The acceptance draw is keyed by ``(seed, rid, round)`` — not by any
+    global counter — so the model-free mirror and the real engines
+    compute identical schedules regardless of slot processing order,
+    and a request's fate is independent of who shares its batch.
+    """
+
+    draft_len: int = 4
+    acceptance: float = 0.7
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.draft_len < 1:
+            raise ValueError("draft_len must be >= 1")
+        if not 0.0 <= self.acceptance <= 1.0:
+            raise ValueError("acceptance must be in [0, 1]")
+        if self.seed < 0:
+            raise ValueError("seed must be >= 0")
+
+    def to_record(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @staticmethod
+    def from_record(rec: dict) -> "SpecDecodeConfig":
+        return SpecDecodeConfig(**rec)
+
+    def accepted(self, rid: int, round_: int) -> int:
+        """Accepted draft-token count for a request's n-th round:
+        leading accepts of ``draft_len`` Bernoulli(acceptance) draws
+        (speculative decoding accepts a prefix — the first rejection
+        discards the rest of the draft)."""
+        draws = np.random.default_rng(
+            (self.seed, rid, round_)).random(self.draft_len)
+        k = 0
+        for d in draws:
+            if d >= self.acceptance:
+                break
+            k += 1
+        return k
+
+    def advance(self, rid: int, round_: int, remaining: int
+                ) -> tuple[int, int, int]:
+        """One round for a request with ``remaining`` budget: returns
+        ``(advance, drafted, accepted)``.  ``advance = accepted + 1``
+        (the verify token) and never exceeds ``remaining``."""
+        drafted = min(self.draft_len, remaining - 1)
+        k = min(self.accepted(rid, round_), drafted)
+        return k + 1, drafted, k
+
+
+def simulate_spec_decode(spec: ScenarioSpec,
+                         spec_decode: SpecDecodeConfig | None = None,
+                         max_ticks: int = 100_000) -> dict:
+    """Tick-exact model-free mirror of speculative-decode serving.
+
+    The ``simulate_batches`` analogue for a :class:`ServingEngine`
+    running ``spec_decode=``: admission and slot fill are identical
+    (arrival-order FIFO into free slots), but each active slot performs
+    one :meth:`SpecDecodeConfig.advance` round per tick instead of a
+    single-token decrement.  Returns per-tick batches, per-tick total
+    advance, per-tick verify sub-steps (``max`` advance — the number of
+    batched decode calls the real engine issues that tick), per-request
+    round/draft/accept/waste counters and completion ticks — everything
+    the differential battery diffs against the engine-driven run.
+    """
+    sd = spec_decode or SpecDecodeConfig()
+    pending = sorted(spec.arrivals, key=lambda a: (a.step, a.rid))
+    i = 0
+    waiting: list[Arrival] = []
+    active = [0] * spec.slots
+    slot_rid = [-1] * spec.slots
+    batches: list[int] = []
+    advance: list[int] = []
+    substeps: list[int] = []
+    rounds: dict[int, int] = {a.rid: 0 for a in spec.arrivals}
+    drafted: dict[int, int] = {a.rid: 0 for a in spec.arrivals}
+    accepted: dict[int, int] = {a.rid: 0 for a in spec.arrivals}
+    completion_ticks: dict[int, int] = {}
+    t = 0
+    while i < len(pending) or waiting or any(active):
+        while i < len(pending) and pending[i].step <= t:
+            waiting.append(pending[i])
+            i += 1
+        for s in range(spec.slots):
+            if active[s] == 0 and waiting:
+                a = waiting.pop(0)
+                active[s] = a.decode_steps()
+                slot_rid[s] = a.rid
+        batches.append(sum(1 for rem in active if rem > 0))
+        adv_total = 0
+        adv_max = 0
+        for s in range(spec.slots):
+            if active[s] > 0:
+                rid = slot_rid[s]
+                adv, drf, acc = sd.advance(rid, rounds[rid], active[s])
+                rounds[rid] += 1
+                drafted[rid] += drf
+                accepted[rid] += acc
+                adv_total += adv
+                adv_max = max(adv_max, adv)
+                active[s] -= adv
+                if active[s] == 0:
+                    completion_ticks[rid] = t
+        advance.append(adv_total)
+        substeps.append(adv_max)
+        t += 1
+        if t > max_ticks:
+            raise ScenarioDrainError(
+                spec.name, max_ticks,
+                queues=dict(waiting=len(waiting),
+                            pending=len(pending) - i),
+                oldest_age=(t - min(a.step for a in waiting)
+                            if waiting else None),
+                last_batch=[rem for rem in active if rem > 0])
+    return dict(per_tick_batch=batches, per_tick_advance=advance,
+                per_tick_substeps=substeps, rounds=rounds,
+                drafted=drafted, accepted=accepted,
+                wasted={r: drafted[r] - accepted[r] for r in drafted},
+                completion_ticks=completion_ticks)
 
 
 # ---------------------------------------------------------------------
@@ -374,6 +556,7 @@ def _shed_pick(waiting: list, t: int, starvation_age: int) -> int:
 def simulate_disagg(spec: ScenarioSpec,
                     disagg: DisaggConfig | None = None,
                     slo: dict[int, str] | None = None,
+                    spec_decode: SpecDecodeConfig | None = None,
                     max_ticks: int = 100_000) -> dict:
     """Tick-exact model-free mirror of the disaggregated cell pair.
 
@@ -393,10 +576,14 @@ def simulate_disagg(spec: ScenarioSpec,
     :func:`_shed_pick` (recorded in ``shed_ticks``) before the tick's
     prefills run.  Under ``DisaggConfig.mirror()`` with a single SLO
     class the decode batch trace equals ``simulate_batches(spec)`` tick
-    for tick.
+    for tick.  With ``spec_decode`` the decode cell runs one seeded
+    accept/advance round per active slot per tick instead of a
+    single-token decrement — the same :meth:`SpecDecodeConfig.advance`
+    spec :func:`simulate_spec_decode` pins for the monolithic engine.
     """
     cfg = disagg or DisaggConfig.mirror()
     slo = slo or {}
+    rounds: dict[int, int] = {a.rid: 0 for a in spec.arrivals}
     pending = sorted(spec.arrivals, key=lambda a: (a.step, a.rid))
     decode_steps = {a.rid: a.decode_steps() for a in spec.arrivals}
     i = 0
@@ -445,7 +632,14 @@ def simulate_disagg(spec: ScenarioSpec,
         batches.append(sum(1 for rem in active if rem > 0))
         for s in range(spec.slots):
             if active[s] > 0:
-                active[s] -= 1
+                if spec_decode is None:
+                    active[s] -= 1
+                else:
+                    rid = slot_rid[s]
+                    adv, _, _ = spec_decode.advance(
+                        rid, rounds[rid], active[s])
+                    rounds[rid] += 1
+                    active[s] -= adv
                 if active[s] == 0:
                     completion_ticks[slot_rid[s]] = t
         depth.append(len(handoff))
@@ -462,7 +656,7 @@ def simulate_disagg(spec: ScenarioSpec,
                 handoff_depth=depth, max_handoff_depth=max_depth,
                 prefill_ticks=prefill_ticks, admit_ticks=admit_ticks,
                 completion_ticks=completion_ticks,
-                shed_ticks=shed_ticks)
+                shed_ticks=shed_ticks, rounds=rounds)
 
 
 def run_policy_over_trace(planner, policy, batches: Sequence[int],
@@ -493,6 +687,7 @@ def run_scenario(scenario: ScenarioSpec, cfg, params, planner,
                  policy_kw: dict | None = None, mesh=None,
                  disagg: "bool | DisaggConfig" = False,
                  slo: dict[int, str] | None = None,
+                 spec_decode: SpecDecodeConfig | None = None,
                  on_tick=None) -> dict:
     """Serve the scenario end to end (real model decode) under an
     adaptive offload controller; return the replayable trace record.
@@ -519,6 +714,13 @@ def run_scenario(scenario: ScenarioSpec, cfg, params, planner,
     gains a ``"disagg"`` key (cell/handoff/SLO telemetry + the embedded
     config, so the trace replays through the cells too).
 
+    ``spec_decode`` — an optional :class:`SpecDecodeConfig`: the
+    engine (monolithic or disagg) serves the scenario speculatively,
+    advancing each request by its seeded accept/advance round per tick
+    (see :func:`simulate_spec_decode`, the tick-exact mirror).  The
+    trace gains a ``"spec_decode"`` key (embedded config + round
+    telemetry) so it replays; vanilla traces are byte-unchanged.
+
     ``on_tick`` — optional ``fn(t, engine)`` called at the top of every
     driver tick, before that tick's submissions.  The chaos harness
     (``serving/chaos.py``) uses it to fire scheduled fault timelines
@@ -529,12 +731,12 @@ def run_scenario(scenario: ScenarioSpec, cfg, params, planner,
     with lane_mesh_scope(mesh):
         return _run_scenario(scenario, cfg, params, planner, policy,
                              fence, max_seq, policy_kw, disagg, slo,
-                             on_tick)
+                             on_tick, spec_decode)
 
 
 def _run_scenario(scenario, cfg, params, planner, policy, fence,
                   max_seq, policy_kw, disagg=False, slo=None,
-                  on_tick=None) -> dict:
+                  on_tick=None, spec_decode=None) -> dict:
     from .engine import Request, ServingEngine
     from .policy import OffloadController
 
@@ -551,10 +753,17 @@ def _run_scenario(scenario, cfg, params, planner, policy, fence,
             else DisaggConfig.mirror()
         eng = DisaggServingEngine(cfg, params, slots=scenario.slots,
                                   max_seq=max_seq, disagg=dcfg,
-                                  controller=controller)
+                                  controller=controller,
+                                  spec_decode=spec_decode)
     else:
         eng = ServingEngine(cfg, params, slots=scenario.slots,
-                            max_seq=max_seq, controller=controller)
+                            max_seq=max_seq, controller=controller,
+                            spec_decode=spec_decode)
+    if spec_decode is not None:
+        # Keep the hot small-shape draft lanes pinned at the MRU end of
+        # the lane LRU for the whole run (see OffloadPlanner.touch_draft
+        # — big replans/grids must not evict them).
+        planner.plan_draft(fence=fence)
     rng = np.random.default_rng(scenario.seed + 1)   # token values only
     pending = sorted(scenario.arrivals, key=lambda a: (a.step, a.rid))
     reqs = {a.rid: Request(rid=a.rid,
@@ -568,6 +777,8 @@ def _run_scenario(scenario, cfg, params, planner, policy, fence,
     while i < len(pending) or any(eng.active) or eng.waiting:
         if on_tick is not None:
             on_tick(t, eng)
+        if spec_decode is not None:
+            planner.touch_draft(fence=fence)
         while i < len(pending) and pending[i].step <= t:
             rid = pending[i].rid
             if disagg:
@@ -613,13 +824,23 @@ def _run_scenario(scenario, cfg, params, planner, policy, fence,
     )
     if disagg:
         trace["disagg"] = stats["disagg"]
+    if spec_decode is not None:
+        trace["spec_decode"] = dict(config=spec_decode.to_record(),
+                                    **eng.spec_report())
     return trace
 
 
 def replay_batches(trace: dict) -> list[int]:
     """Re-derive the per-tick occupancy of a recorded trace from its
-    embedded schedule alone (no model, no planner) — the replay hook."""
-    return simulate_batches(ScenarioSpec.from_record(trace["scenario"]))
+    embedded schedule alone (no model, no planner) — the replay hook.
+    Speculative traces replay through their embedded
+    :class:`SpecDecodeConfig` (the mirror's acceptance schedule is part
+    of the record)."""
+    spec = ScenarioSpec.from_record(trace["scenario"])
+    if "spec_decode" in trace:
+        sd = SpecDecodeConfig.from_record(trace["spec_decode"]["config"])
+        return simulate_spec_decode(spec, sd)["per_tick_batch"]
+    return simulate_batches(spec)
 
 
 def replay_trace(trace: dict, cfg, params, planner, mesh=None) -> dict:
@@ -638,10 +859,14 @@ def replay_trace(trace: dict, cfg, params, planner, mesh=None) -> dict:
     """
     disagg: "bool | DisaggConfig" = False
     slo = None
+    spec_decode = None
     if "disagg" in trace:
         disagg = DisaggConfig.from_record(trace["disagg"]["config"])
         slo = {int(r): s for r, s in trace["disagg"]["slo"].items()}
+    if "spec_decode" in trace:
+        spec_decode = SpecDecodeConfig.from_record(
+            trace["spec_decode"]["config"])
     return run_scenario(ScenarioSpec.from_record(trace["scenario"]),
                         cfg, params, planner, policy=trace["policy"],
                         fence=trace["fence"], mesh=mesh,
-                        disagg=disagg, slo=slo)
+                        disagg=disagg, slo=slo, spec_decode=spec_decode)
