@@ -509,6 +509,57 @@ def main(quick: bool = False) -> dict:
         f"warm disagg serve re-resolved {new_misses} lanes"
     print(f"fleet/disagg_lane_resolves,{new_misses},{len(dec_trace)}")
 
+    # Serve-daemon economics (model-free): the autoscaled cell pair vs
+    # the fixed-slot oracle on the same bounded SLO-mixed workload.
+    # Efficiency = decode work served per slot-tick PROVISIONED — the
+    # fixed oracle provisions slots x ticks, the autoscaler only what
+    # its limit trace admits — asserted >= 0.95x the oracle (in
+    # practice well above 1: idle slots are the oracle's waste).  The
+    # streamed-trace writer is timed per record with its chunk
+    # reassembly asserted equal, so the daemon rows always track a
+    # correct trace path.
+    from repro.serving.daemon import TraceWriter
+    from repro.serving.scenarios import AutoscaleConfig
+    auto_cfg = AutoscaleConfig(min_slots=1)
+    slo_d = assign_slo(spec_d, 0.6)
+    t0 = time.perf_counter()
+    for _ in range(reps_d):
+        auto_sim = simulate_disagg(spec_d, dcfg, slo_d,
+                                   autoscale=auto_cfg)
+    daemon_auto_s = (time.perf_counter() - t0) / reps_d
+    fixed_sim = simulate_disagg(spec_d, dcfg, slo_d)
+    auto_ticks = len(auto_sim["per_tick_batch"])
+    auto_eff = sum(auto_sim["per_tick_batch"]) / sum(auto_sim["limits"])
+    fixed_eff = (sum(fixed_sim["per_tick_batch"])
+                 / (spec_d.slots * len(fixed_sim["per_tick_batch"])))
+    daemon_eff_ratio = auto_eff / fixed_eff
+    assert daemon_eff_ratio >= 0.95, \
+        f"autoscale efficiency {daemon_eff_ratio:.3f}x below the oracle"
+    assert set(auto_sim["completion_ticks"]) == \
+        set(fixed_sim["completion_ticks"]), \
+        "autoscale must complete the same request set"
+    print(f"fleet/daemon_sim_autoscale,{daemon_auto_s*1e6/auto_ticks:.2f},"
+          f"{auto_ticks/daemon_auto_s:.0f}")
+    print(f"fleet/daemon_autoscale_efficiency,{daemon_eff_ratio:.2f},"
+          f"{auto_ticks/len(fixed_sim['per_tick_batch']):.2f}")
+
+    with tempfile.TemporaryDirectory(prefix="repro-daemon-") as tdir:
+        path = f"{tdir}/trace.jsonl"
+        writer = TraceWriter(path, chunk_records=256)
+        writer.write_meta(scenario=spec_d.to_record(), policy="bench",
+                          fence=True)
+        t0 = time.perf_counter()
+        for tick, b in enumerate(auto_sim["per_tick_batch"]):
+            writer.write_tick(tick, b)
+        writer.write_summary(dict(limits=auto_sim["limits"]))
+        writer.close()
+        daemon_stream_s = time.perf_counter() - t0
+        loaded = TraceWriter.load(path)
+    assert loaded["per_tick_batch"] == auto_sim["per_tick_batch"], \
+        "streamed chunks must reassemble the exact tick trace"
+    print(f"fleet/daemon_stream,{daemon_stream_s*1e6/auto_ticks:.2f},"
+          f"{writer.flushes}")
+
     # Chaos: the degradation ladder on the fleet resolve path.  The
     # same prebuilt points resolve three ways — healthy; under a
     # transient top-rung fault (absorbed by one bounded retry, backoff
@@ -622,6 +673,9 @@ def main(quick: bool = False) -> dict:
                 disagg_efficiency=disagg_eff,
                 disagg_max_handoff_depth=dsim["max_handoff_depth"],
                 disagg_lane_resolves=new_misses,
+                daemon_autoscale_efficiency=daemon_eff_ratio,
+                daemon_sim_tick_us=daemon_auto_s * 1e6 / auto_ticks,
+                daemon_stream_record_us=daemon_stream_s * 1e6 / auto_ticks,
                 chaos_ladder=ladder,
                 chaos_absorbed_overhead=chaos_absorbed_s / chaos_healthy_s,
                 chaos_degraded_overhead=(

@@ -423,48 +423,164 @@ def compile_cache_size() -> int:
 # single-device scan (see _ladder_rungs): a run starts on the highest
 # configured rung and, on failure — a kernel raise, a mesh shard loss, an
 # injected chaos fault — steps down after bounded retries, with a circuit
-# breaker (faults.backend_breaker) skipping rungs that have failed K
-# consecutive resolves.  Because every rung is bit-identical by contract,
-# a degraded resolve returns byte-exact results; every step-down is
-# recorded as a structured event (core/faults.py).
+# breaker skipping rungs that have failed K consecutive resolves.
+# Because every rung is bit-identical by contract, a degraded resolve
+# returns byte-exact results; every step-down is recorded as a
+# structured event (core/faults.py).
+#
+# Backend configuration lives in a BackendScope: the process keeps ONE
+# default scope behind the classic configure_* API (so single-cell
+# callers never see scopes), and serving cells each carry their own —
+# one cell's mesh, backend, ladder and circuit breaker can no longer
+# bleed into the other's (the old process-global _LANE_BACKEND /
+# _LANE_MESH state meant a breaker tripped by prefill-side faults
+# skipped that rung for decode too).
 # ---------------------------------------------------------------------------
 
 _LANE_BACKENDS = ("scan", "pallas", "auto")
-_LANE_BACKEND: str | None = None
+
+
+@dataclasses.dataclass
+class BackendScope:
+    """One lane-execution scope: requested backend, lane mesh, device
+    cap and its OWN circuit breaker.
+
+    ``None`` fields fall through to the same environment defaults the
+    old module globals used (``REPRO_LANE_BACKEND`` /
+    ``REPRO_LANE_DEVICES``), so a fresh scope behaves exactly like an
+    unconfigured process.  Serving cells construct one scope each and
+    activate it around their tick work (:class:`backend_scope`), which
+    is what keeps a prefill-side degradation or breaker trip from ever
+    changing the decode cell's ladder.  ``mesh`` accepts an ``int`` n
+    (builds a 1-D ``lanes`` mesh over the first n devices) or a
+    prebuilt 1-D mesh.
+    """
+
+    backend: str | None = None
+    mesh: "Mesh | int | None" = None
+    max_devices: int | None = None
+    breaker: "faults.CircuitBreaker | None" = dataclasses.field(
+        default_factory=faults.CircuitBreaker)
+    name: str = ""
+
+    def __post_init__(self):
+        if self.backend is not None:
+            b = str(self.backend).lower()
+            if b not in _LANE_BACKENDS:
+                raise ValueError(f"lane backend must be one of "
+                                 f"{_LANE_BACKENDS}, got {self.backend!r}")
+            self.backend = b
+        if self.mesh is not None:
+            if isinstance(self.mesh, int):
+                self.mesh = build_lane_mesh(self.mesh)
+            elif len(self.mesh.axis_names) != 1:
+                raise ValueError(f"lane mesh must be 1-D, got axes "
+                                 f"{self.mesh.axis_names}")
+
+    def scope_breaker(self) -> "faults.CircuitBreaker":
+        """This scope's breaker; the default scope (``breaker=None``)
+        delegates to the process breaker so ``faults.configure_breaker``
+        and the chaos harness keep their classic behavior."""
+        return (self.breaker if self.breaker is not None
+                else faults.backend_breaker())
+
+    def describe(self) -> dict:
+        """Trace-exportable view: what this scope resolves to here."""
+        return dict(
+            name=self.name,
+            backend=lane_backend(self),
+            resolved=resolved_lane_backend(self),
+            mesh=(None if self.mesh is None else int(self.mesh.size)),
+            devices=len(lane_devices(self)),
+            rungs=ladder_rungs(self),
+            breaker=self.scope_breaker().info())
+
+
+# The process-default scope: what the classic configure_* API mutates
+# and what resolve_lanes runs under when no scope is active.  Its
+# breaker field stays None so faults.configure_breaker() keeps
+# governing the default ladder.
+_DEFAULT_SCOPE = BackendScope(breaker=None, name="default")
+_ACTIVE_SCOPE: BackendScope | None = None
+
+
+def default_backend_scope() -> BackendScope:
+    """The process-default scope (the classic configure_* target)."""
+    return _DEFAULT_SCOPE
+
+
+def active_backend_scope() -> BackendScope:
+    """The scope lane resolution runs under right now — the default
+    scope unless a :class:`backend_scope` block is active."""
+    return _ACTIVE_SCOPE if _ACTIVE_SCOPE is not None else _DEFAULT_SCOPE
+
+
+class backend_scope:
+    """Context manager: activate ``scope`` for every lane resolve in
+    the block (``None`` = the process-default scope), then restore.
+
+    Serving cells wrap their per-tick work in this so planner →
+    executor → resolve_fleet chains land in the cell's scope without
+    plumbing a parameter through every layer."""
+
+    def __init__(self, scope: BackendScope | None):
+        self._scope = scope
+
+    def __enter__(self) -> BackendScope:
+        global _ACTIVE_SCOPE
+        self._prev = _ACTIVE_SCOPE
+        _ACTIVE_SCOPE = self._scope
+        return active_backend_scope()
+
+    def __exit__(self, *exc):
+        global _ACTIVE_SCOPE
+        _ACTIVE_SCOPE = self._prev
+        return False
+
+
+def reset_backend_scopes() -> None:
+    """Deactivate any active scope and restore the default scope's
+    fields to boot state (tests/conftest.py hygiene)."""
+    global _ACTIVE_SCOPE
+    _ACTIVE_SCOPE = None
+    _DEFAULT_SCOPE.backend = None
+    _DEFAULT_SCOPE.mesh = None
+    _DEFAULT_SCOPE.max_devices = None
 
 
 def configure_lane_backend(name: str | None) -> str:
-    """Select the lane-resolver backend ("scan" | "pallas" | "auto").
+    """Select the default scope's lane-resolver backend ("scan" |
+    "pallas" | "auto").
 
     ``None`` restores the default (REPRO_LANE_BACKEND env var, else
     "scan").  Returns the *requested* backend; the capability-checked
     choice is :func:`resolved_lane_backend`.
     """
-    global _LANE_BACKEND
     if name is not None:
         name = str(name).lower()
         if name not in _LANE_BACKENDS:
             raise ValueError(f"lane backend must be one of "
                              f"{_LANE_BACKENDS}, got {name!r}")
-    _LANE_BACKEND = name
+    _DEFAULT_SCOPE.backend = name
     return lane_backend()
 
 
-def lane_backend() -> str:
-    """The requested lane backend (configured > env > "scan")."""
-    if _LANE_BACKEND is not None:
-        return _LANE_BACKEND
+def lane_backend(scope: BackendScope | None = None) -> str:
+    """The requested lane backend (scope > env > "scan")."""
+    scope = active_backend_scope() if scope is None else scope
+    if scope.backend is not None:
+        return scope.backend
     env = os.environ.get("REPRO_LANE_BACKEND", "").lower()
     return env if env in _LANE_BACKENDS else "scan"
 
 
-def resolved_lane_backend() -> str:
+def resolved_lane_backend(scope: BackendScope | None = None) -> str:
     """The backend slabs will actually run on: "scan" or "pallas".
 
     "pallas"/"auto" requests degrade to "scan" when the Pallas kernel is
     not runnable here (capability probe, cached per process).
     """
-    req = lane_backend()
+    req = lane_backend(scope)
     if req == "scan":
         return "scan"
     from repro.kernels import lane_scan
@@ -479,12 +595,11 @@ class lane_backend_scope:
         self._name = name
 
     def __enter__(self):
-        self._prev = _LANE_BACKEND
+        self._prev = _DEFAULT_SCOPE.backend
         return configure_lane_backend(self._name)
 
     def __exit__(self, *exc):
-        global _LANE_BACKEND
-        _LANE_BACKEND = self._prev
+        _DEFAULT_SCOPE.backend = self._prev
         return False
 
 
@@ -771,19 +886,16 @@ def lane_cache_verify() -> int:
 # into an N-device fleet (how CI and the benchmarks exercise this).
 # ---------------------------------------------------------------------------
 
-_MAX_LANE_DEVICES: int | None = None
-
-
 def configure_lane_devices(n: int | None) -> None:
-    """Cap the devices used for lane sharding (None = env/all)."""
-    global _MAX_LANE_DEVICES
-    _MAX_LANE_DEVICES = n
+    """Cap the devices the default scope shards over (None = env/all)."""
+    _DEFAULT_SCOPE.max_devices = n
 
 
-def lane_devices() -> list:
+def lane_devices(scope: BackendScope | None = None) -> list:
     """Devices the lane resolver shards over (default-backend order)."""
     devs = jax.devices()
-    n = _MAX_LANE_DEVICES
+    scope = active_backend_scope() if scope is None else scope
+    n = scope.max_devices
     if n is None:
         n = int(os.environ.get("REPRO_LANE_DEVICES", "0") or 0) or len(devs)
     return devs[: max(1, min(n, len(devs)))]
@@ -797,9 +909,6 @@ def lane_devices() -> list:
 # device dispatch above remains the fallback and the parity oracle
 # (tests/test_mesh.py asserts bit-identity between the two).
 # ---------------------------------------------------------------------------
-
-_LANE_MESH: Mesh | None = None
-
 
 def build_lane_mesh(n: int) -> Mesh:
     """Construct (without configuring) a 1-D ``lanes`` mesh over the
@@ -815,29 +924,29 @@ def build_lane_mesh(n: int) -> Mesh:
 
 
 def configure_lane_mesh(mesh: "Mesh | int | None") -> Mesh | None:
-    """Select the mesh backend for lane resolution.
+    """Select the default scope's mesh backend for lane resolution.
 
     ``None`` restores the threaded fallback; an ``int`` n builds a 1-D
     ``lanes`` mesh over the first n visible devices; a prebuilt 1-D
     :class:`jax.sharding.Mesh` is used as-is (its single axis is the lane
     axis, whatever its name).  Returns the configured mesh (or None).
     """
-    global _LANE_MESH
     if mesh is None:
-        _LANE_MESH = None
+        _DEFAULT_SCOPE.mesh = None
         return None
     if isinstance(mesh, int):
         mesh = build_lane_mesh(mesh)
     if len(mesh.axis_names) != 1:
         raise ValueError(f"lane mesh must be 1-D, got axes "
                          f"{mesh.axis_names}")
-    _LANE_MESH = mesh
+    _DEFAULT_SCOPE.mesh = mesh
     return mesh
 
 
-def lane_mesh() -> Mesh | None:
+def lane_mesh(scope: BackendScope | None = None) -> Mesh | None:
     """The configured lane mesh (None = threaded dispatch)."""
-    return _LANE_MESH
+    scope = active_backend_scope() if scope is None else scope
+    return scope.mesh
 
 
 class lane_mesh_scope:
@@ -848,12 +957,11 @@ class lane_mesh_scope:
         self._mesh = mesh
 
     def __enter__(self):
-        self._prev = lane_mesh()
+        self._prev = _DEFAULT_SCOPE.mesh
         return configure_lane_mesh(self._mesh)
 
     def __exit__(self, *exc):
-        global _LANE_MESH
-        _LANE_MESH = self._prev
+        _DEFAULT_SCOPE.mesh = self._prev
         return False
 
 
@@ -893,9 +1001,10 @@ def _give_slab(buf: np.ndarray) -> None:
             spares.append(buf)
 
 
-def _ladder_rungs() -> list[str]:
-    """The degradation ladder for this process configuration, highest
-    rung first: pallas → mesh → threaded → single-device scan.
+def _ladder_rungs(scope: BackendScope | None = None) -> list[str]:
+    """The degradation ladder for ``scope`` (default: the active
+    scope), highest rung first: pallas → mesh → threaded →
+    single-device scan.
 
     Only configured rungs appear — "pallas" when the resolved backend is
     the Pallas kernel, "mesh" when a lane mesh is configured, "threaded"
@@ -906,27 +1015,31 @@ def _ladder_rungs() -> list[str]:
     bit-identical by contract, where a resolve lands never changes its
     bytes.
     """
+    scope = active_backend_scope() if scope is None else scope
     rungs = []
-    if resolved_lane_backend() == "pallas":
+    if resolved_lane_backend(scope) == "pallas":
         rungs.append("pallas")
-    if lane_mesh() is not None:
+    if lane_mesh(scope) is not None:
         rungs.append("mesh")
-    if len(lane_devices()) > 1:
+    if len(lane_devices(scope)) > 1:
         rungs.append("threaded")
     rungs.append("scan")
     return rungs
 
 
-def ladder_rungs() -> list[str]:
-    """Public view of the active degradation ladder (highest first) —
-    what the chaos harness arms fault schedules against."""
-    return _ladder_rungs()
+def ladder_rungs(scope: BackendScope | None = None) -> list[str]:
+    """Public view of a scope's degradation ladder (highest first) —
+    what the chaos harness arms fault schedules against.  With no
+    argument this is the active scope's ladder (the default scope
+    unless a cell's :class:`backend_scope` block is live)."""
+    return _ladder_rungs(scope)
 
 
 def resolve_lanes(
     lanes: Sequence[tuple[TimingCycles, np.ndarray]],
     keys: Sequence[Hashable | None] | None = None,
     need_issue: bool = True,
+    scope: BackendScope | None = None,
 ) -> list[tuple[np.ndarray | None, int]]:
     """Resolve a flat list of (timing config, stream) lanes.
 
@@ -964,7 +1077,13 @@ def resolve_lanes(
     cycles (totals-only, the ``run_many``/serving path) and makes totals
     LRU hits possible for lanes whose issue arrays were too large to
     cache.
+
+    ``scope`` — the :class:`BackendScope` to resolve under (ladder,
+    mesh, devices AND circuit breaker); defaults to the active scope,
+    so cells that activate their scope with :class:`backend_scope` need
+    not pass it explicitly.
     """
+    scope = active_backend_scope() if scope is None else scope
     lanes = list(lanes)
     uniq: list[list] = []              # [cyc, stream, ukey]
     lane_of: list[int] = []            # flat lane -> unique lane
@@ -1053,7 +1172,7 @@ def resolve_lanes(
         # sharded over the ``lanes`` mesh axis, the width is padded so
         # each shard gets the same power-of-two bucket, and tail rows
         # (config of lane 0, all-NOP streams) are masked by _store.
-        mesh = lane_mesh()
+        mesh = lane_mesh(scope)
         sharding = NamedSharding(mesh, PartitionSpec(mesh.axis_names[0]))
         m = mesh.size
         for (nb, length), idxs in _pending_groups().items():
@@ -1151,11 +1270,11 @@ def resolve_lanes(
         if rung == "mesh":
             _run_mesh()
         elif rung == "pallas":
-            _run_sharded(_pallas_resolver, lane_devices())
+            _run_sharded(_pallas_resolver, lane_devices(scope))
         elif rung == "threaded":
-            _run_sharded(_fleet_resolver, lane_devices())
+            _run_sharded(_fleet_resolver, lane_devices(scope))
         else:                                   # single-device scan
-            _run_sharded(_fleet_resolver, lane_devices()[:1])
+            _run_sharded(_fleet_resolver, lane_devices(scope)[:1])
 
     # Walk the degradation ladder: start on the highest closed rung,
     # absorb transient faults with bounded retries, step down on
@@ -1163,8 +1282,8 @@ def resolve_lanes(
     # terminal scan rung is never skipped; if IT fails after retries the
     # error propagates — there is nothing below.
     if todo:
-        breaker = faults.backend_breaker()
-        rungs = _ladder_rungs()
+        breaker = scope.scope_breaker()
+        rungs = _ladder_rungs(scope)
         for i, rung in enumerate(rungs):
             site = "backend." + rung
             terminal = i == len(rungs) - 1
@@ -1192,6 +1311,7 @@ def resolve_fleet(
     points: Sequence[tuple[TimingCycles, Iterable[np.ndarray]]],
     keys: Sequence[Sequence[Hashable | None]] | None = None,
     need_issue: bool = True,
+    scope: BackendScope | None = None,
 ) -> list[FleetResult]:
     """Resolve many (timing config, per-channel streams) points at once.
 
@@ -1214,7 +1334,7 @@ def resolve_fleet(
             owner.append(pi)
 
     resolved = resolve_lanes(flat, keys=flat_keys if keys is not None
-                             else None, need_issue=need_issue)
+                             else None, need_issue=need_issue, scope=scope)
     out = [FleetResult(issue=[], totals=np.zeros(0, np.int32))
            for _ in points]
     per_point: list[list[int]] = [[] for _ in points]

@@ -274,12 +274,20 @@ class CircuitBreaker:
     process model a tripped rung stays skipped until :func:`reset` (the
     conservative choice — a flapping backend must not oscillate the
     serve path).
+
+    Breakers are per-:class:`~repro.core.engine.BackendScope`: the
+    process breaker below guards the default scope only, and each serve
+    cell's scope carries its own instance — a rung tripped by
+    prefill-side faults no longer skips that rung for decode.  ``name``
+    tags a scoped breaker's trip events (the anonymous process breaker
+    keeps the classic event text).
     """
 
-    def __init__(self, threshold: int = 3):
+    def __init__(self, threshold: int = 3, name: str = ""):
         if threshold < 1:
             raise ValueError("breaker threshold must be >= 1")
         self.threshold = int(threshold)
+        self.name = str(name)
         self.failures: dict[str, int] = {}
         self.open: set[str] = set()
 
@@ -288,9 +296,10 @@ class CircuitBreaker:
         self.failures[key] = n
         if n >= self.threshold and key not in self.open:
             self.open.add(key)
+            who = f" [{self.name}]" if self.name else ""
             record_event(key, "trip",
                          f"open after {n} consecutive failures "
-                         f"(threshold {self.threshold})")
+                         f"(threshold {self.threshold}){who}")
             return True
         return False
 
@@ -302,9 +311,14 @@ class CircuitBreaker:
         return key in self.open
 
     def info(self) -> dict:
-        return dict(threshold=self.threshold, open=sorted(self.open),
-                    failures={k: v for k, v in sorted(self.failures.items())
-                              if v})
+        out = dict(threshold=self.threshold, open=sorted(self.open),
+                   failures={k: v for k, v in sorted(self.failures.items())
+                             if v})
+        if self.name:
+            # Only scoped (named) breakers carry the tag, so the golden
+            # chaos traces' anonymous breaker info stays byte-identical.
+            out["name"] = self.name
+        return out
 
 
 _BREAKER = CircuitBreaker()

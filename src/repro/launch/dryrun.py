@@ -215,14 +215,14 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
              variant: str = "baseline") -> dict:
     mesh_name = "pod2" if multi_pod else "pod1"
     apply_variant(variant)
-    t0 = time.time()
+    t0 = time.perf_counter()
     rec = dict(arch=arch, shape=shape_name, mesh=mesh_name,
                variant=variant, status="ok")
     try:
         lowered, mesh, cfg, shape = lower_cell(arch, shape_name, multi_pod)
-        t_lower = time.time() - t0
+        t_lower = time.perf_counter() - t0
         compiled = lowered.compile()
-        t_compile = time.time() - t0 - t_lower
+        t_compile = time.perf_counter() - t0 - t_lower
         mem = compiled.memory_analysis()
         cost = compiled.cost_analysis()
         hlo = compiled.as_text()
@@ -255,7 +255,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
         rec["status"] = "error"
         rec["error"] = f"{type(e).__name__}: {e}"
         rec["traceback"] = traceback.format_exc()[-4000:]
-    rec["wall_s"] = round(time.time() - t0, 1)
+    rec["wall_s"] = round(time.perf_counter() - t0, 1)
     apply_variant("baseline")
     if save:
         OUT_DIR.mkdir(parents=True, exist_ok=True)

@@ -19,6 +19,15 @@ fraction, the rest throughput class with ``--starvation-age`` aging) —
 and reports the handoff-queue and per-class telemetry on top of the
 offload report.
 
+``--daemon`` serves the scenario through the long-running
+:class:`~repro.serving.daemon.ServeDaemon` (always the disaggregated
+cell pair): asynchronous ingestion, drain/shutdown accounting, optional
+SLO-driven decode autoscaling (``--autoscale``, bounded below by
+``--min-slots``), an optional completion cap (``--max-requests``), and
+streaming trace export (``--trace-out FILE`` writes tick-ordered JSONL
+chunks in bounded memory; ``TraceWriter.load`` reassembles a trace
+byte-identical to the in-memory path).
+
 ``--chaos`` runs the scenario under a seeded fault timeline
 (``serving/chaos.py``, seed via ``--faults``): injected backend
 failures, lane-cache poison/eviction storms, planner timeouts and
@@ -169,6 +178,56 @@ def _print_chaos_report(rec: dict) -> None:
           f"sheds={by_kind.get('shed', 0)},unhandled=0", flush=True)
 
 
+def run_daemon_mode(args, full_cfg, cfg, params, mesh=None) -> None:
+    """Serve the scenario through :class:`ServeDaemon` and print the
+    operational report (parseable ``serve/daemon`` row, ``unhandled=0``
+    on a clean run — same convention as the chaos smoke)."""
+    from repro.serving.daemon import ServeDaemon, TraceWriter
+    from repro.serving.scenarios import AutoscaleConfig
+
+    planner = OffloadPlanner(full_cfg, PimSimulator())
+    planner.plan(fence=args.fence)
+    spec = make_scenario(args.scenario, seed=args.seed, slots=args.slots,
+                         quick=args.quick)
+    dcfg = _disagg_config(args)
+    slo = (assign_slo(spec, frac_latency=args.slo)
+           if args.slo is not None else None)
+    auto = (AutoscaleConfig(min_slots=args.min_slots)
+            if args.autoscale else None)
+    writer = (TraceWriter(args.trace_out)
+              if args.trace_out is not None else None)
+    t0 = time.perf_counter()
+    with lane_engine.lane_mesh_scope(mesh):
+        daemon = ServeDaemon(
+            cfg, params, planner, scenario=spec, policy=args.policy,
+            fence=args.fence,
+            disagg=(dcfg if isinstance(dcfg, DisaggConfig) else None),
+            slo=slo, autoscale=auto, max_requests=args.max_requests,
+            writer=writer)
+        rep = daemon.run()
+    dt = time.perf_counter() - t0
+    acct = rep["accounting"]
+    print(f"daemon scenario {args.scenario} (seed={args.seed}, "
+          f"{len(spec.arrivals)} requests, {args.slots} slots): "
+          f"{acct['completed']} completed / {acct['shed']} shed / "
+          f"{acct['dropped']} dropped in {rep['ticks']} ticks "
+          f"({dt:.2f}s host wall)")
+    if auto is not None:
+        asr = rep["autoscale"]
+        lims = asr["limits"] or [0]
+        print(f"  autoscale            : limit {min(lims)}..{max(lims)} "
+              f"over {len(lims)} ticks ({asr['grows']} grows, "
+              f"{asr['shrinks']} shrinks, "
+              f"{asr['slot_ticks']} slot-ticks provisioned)")
+    if writer is not None:
+        print(f"  streamed trace       : {writer.records} records in "
+              f"{writer.flushes} chunks -> {args.trace_out}")
+    print(f"serve/daemon,ingested={acct['ingested']},"
+          f"completed={acct['completed']},shed={acct['shed']},"
+          f"dropped={acct['dropped']},in_flight={acct['in_flight']},"
+          f"ticks={rep['ticks']},unhandled=0", flush=True)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="granite-8b", choices=list(ARCHS))
@@ -213,6 +272,25 @@ def main() -> None:
                     metavar="N", help="with --disagg: admission-queue "
                     "capacity; arrivals over it shed the lowest SLO "
                     "class first (default unbounded, never sheds)")
+    ap.add_argument("--daemon", action="store_true",
+                    help="serve --scenario through the long-running "
+                         "ServeDaemon (serving/daemon.py): async "
+                         "ingestion, drain accounting, autoscaling and "
+                         "streamed traces; implies --disagg")
+    ap.add_argument("--max-requests", type=int, default=None, metavar="N",
+                    help="with --daemon: auto-drain after N completed "
+                         "requests (default: serve the whole scenario)")
+    ap.add_argument("--trace-out", default=None, metavar="FILE",
+                    help="with --daemon: stream the trace to FILE as "
+                         "tick-ordered JSONL chunks (bounded memory) "
+                         "instead of holding it in RAM")
+    ap.add_argument("--autoscale", action="store_true",
+                    help="with --daemon: grow/shrink the decode cell's "
+                         "admission limit against per-class SLO wait "
+                         "telemetry (AutoscaleConfig rule)")
+    ap.add_argument("--min-slots", type=int, default=1, metavar="N",
+                    help="with --autoscale: the admission-limit floor "
+                         "(ceiling is the scenario's slot capacity)")
     ap.add_argument("--chaos", action="store_true",
                     help="run the scenario under a seeded fault "
                          "timeline (serving/chaos.py); implies "
@@ -238,6 +316,19 @@ def main() -> None:
     args = ap.parse_args()
     if args.chaos and not args.scenario:
         args.scenario = "chaos"
+    if args.daemon:
+        if not args.scenario:
+            ap.error("--daemon needs --scenario (the arrival process)")
+        if args.chaos:
+            ap.error("--daemon and --chaos are separate drivers; drive "
+                     "chaos timelines through ServeDaemon's on_tick hook")
+        args.disagg = True          # the daemon IS the cell pair
+    for flag, name in ((args.max_requests, "--max-requests"),
+                       (args.trace_out, "--trace-out")):
+        if flag is not None and not args.daemon:
+            ap.error(f"{name} requires --daemon")
+    if args.autoscale and not args.daemon:
+        ap.error("--autoscale requires --daemon")
     # Registry-backed validation instead of a frozen argparse ``choices``
     # list: underscore aliases resolve (``spec_decode`` works) and
     # unknown names fail with the full menu.
@@ -268,6 +359,11 @@ def main() -> None:
         from repro.launch.mesh import make_lane_mesh
         mesh = make_lane_mesh(args.mesh)
         print(f"lane mesh: shard_map over {args.mesh} device(s)")
+
+    if args.daemon:
+        run_daemon_mode(args, full_cfg, cfg, params, mesh=mesh)
+        _warm_epilogue(args)
+        return
 
     if args.scenario:
         run_scenario_mode(args, full_cfg, cfg, params, mesh=mesh,

@@ -20,11 +20,18 @@ for :class:`~repro.serving.engine.ServingEngine`:
   refill), and every tick runs ONE batched ``decode_step`` over all
   active slots, exactly the monolithic engine's decode loop.
 
-Each cell can carry its own :class:`OffloadController` policy and the
-pair runs under whatever lane mesh / backend is configured — both cells
-share the process-global resolved-lane LRU and warm-start caches
-(``core/engine.py`` / ``core/warmstart.py``), so a prefill→decode
-handoff never re-resolves lanes (asserted in ``tests/test_disagg.py``).
+Each cell can carry its own :class:`OffloadController` policy AND its
+own :class:`~repro.core.engine.BackendScope` (lane backend, mesh,
+device cap, circuit breaker): a cell activates its scope around its
+tick work, so a prefill-side backend fault or breaker trip never
+changes the decode cell's ladder — the cells' execution resources are
+provisioned independently, like real disaggregated deployments.
+Without scopes both cells run under the process-default scope (the
+classic ``configure_lane_backend`` / ``configure_lane_mesh`` state).
+Both cells still share the process-global resolved-lane LRU and
+warm-start caches (``core/engine.py`` / ``core/warmstart.py``), so a
+prefill→decode handoff never re-resolves lanes (asserted in
+``tests/test_disagg.py``).
 
 Under ``DisaggConfig.mirror()`` (unbounded prefill/handoff, one SLO
 class) the pair replays the monolithic engine tick-exactly: identical
@@ -37,6 +44,7 @@ implementation the parity battery diffs against it.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 from typing import Optional
 
@@ -46,12 +54,21 @@ import numpy as np
 
 from repro.configs.base import ArchConfig
 from repro.core import faults
+from repro.core import engine as lane_engine
 from repro.models import model as M
 from .engine import Request
 from .offload import OffloadPlanner
 from .policy import OffloadController
 from .scenarios import (DisaggConfig, SLO_CLASSES, SLO_LATENCY,
                         SLO_THROUGHPUT)
+
+
+def _scope_ctx(scope):
+    """A cell's scope activation: ``backend_scope`` when the cell
+    carries one, a no-op otherwise (so unscoped cells keep inheriting
+    whatever scope — default or enclosing — is already active)."""
+    return (lane_engine.backend_scope(scope) if scope is not None
+            else contextlib.nullcontext())
 
 
 class AdmissionQueue:
@@ -114,6 +131,11 @@ class AdmissionQueue:
         enq, _, req, slo = self._entries.pop(pick)
         return req, slo, enq
 
+    def wait_entries(self) -> list[tuple[int, str]]:
+        """(enqueue tick, slo) of every waiting request — the per-class
+        wait-age telemetry the autoscaler's grow signal reads."""
+        return [(enq, slo) for enq, _, _, slo in self._entries]
+
 
 @dataclasses.dataclass
 class KVHandoff:
@@ -135,6 +157,7 @@ class KVHandoffQueue:
         self._q: list[KVHandoff] = []
         self.handoffs = 0
         self.max_depth = 0
+        self.waits: list[int] = []   # per-pop ticks spent in the queue
 
     def __len__(self) -> int:
         return len(self._q)
@@ -160,12 +183,28 @@ class KVHandoffQueue:
         self.handoffs += 1
         self.max_depth = max(self.max_depth, len(self._q))
 
-    def pop(self) -> KVHandoff:
-        return self._q.pop(0)
+    def pop(self, tick: int | None = None) -> KVHandoff:
+        """FIFO pop; with ``tick`` the item's queue wait (ticks between
+        prefill and decode admission) is recorded for telemetry."""
+        item = self._q.pop(0)
+        if tick is not None:
+            self.waits.append(int(tick) - item.prefill_tick)
+        return item
 
     def report(self) -> dict:
         return dict(bound=self.bound, depth=len(self._q),
                     handoffs=self.handoffs, max_depth=self.max_depth)
+
+    def wait_report(self) -> dict:
+        """Queue-wait telemetry, guarded for empty populations: a
+        zero-request (or all-shed) run reports neutral ``0.0`` means —
+        the PR 7 zero-request convention — never a divide by zero.
+        Kept out of :meth:`report` so the golden disagg traces stay
+        byte-identical."""
+        n = len(self.waits)
+        return dict(pops=n,
+                    mean_wait=(sum(self.waits) / n if n else 0.0),
+                    max_wait=(max(self.waits) if n else 0))
 
 
 class PrefillCell:
@@ -181,18 +220,24 @@ class PrefillCell:
     def __init__(self, cfg: ArchConfig, params, max_seq: int,
                  budget: int | None = None, starvation_age: int = 8,
                  admission_capacity: int | None = None,
-                 controller: Optional[OffloadController] = None):
+                 controller: Optional[OffloadController] = None,
+                 scope: "lane_engine.BackendScope | None" = None):
         self.cfg, self.params = cfg, params
         self.max_seq = max_seq
         self.budget = budget
         self.admission_capacity = admission_capacity
         self.queue = AdmissionQueue(starvation_age)
         self.controller = controller
+        self.scope = scope
         self.stats = dict(prefills=0, ticks=0)
         self.prefill_ticks: dict[int, int] = {}
         self.enq_ticks: dict[int, int] = {}
         self.slo_of: dict[int, str] = {}
         self.shed: dict[int, int] = {}    # rid -> shed tick
+        # Jitted like the decode cell's step: one compile per prompt
+        # length keeps a budget-6 prefill tick in the milliseconds.
+        self._prefill_fn = jax.jit(
+            lambda p, b, c: M.prefill(cfg, p, b, c))
 
     def submit(self, req: Request, slo: str, tick: int) -> None:
         self.queue.push(req, slo, tick)
@@ -215,15 +260,21 @@ class PrefillCell:
         assert s < self.max_seq
         prompt = jnp.asarray(req.prompt, jnp.int32)[None]
         cache = M.init_cache(self.cfg, 1, self.max_seq, jnp.float32)
-        logits, cache = M.prefill(self.cfg, self.params,
-                                  {"tokens": prompt}, cache)
+        logits, cache = self._prefill_fn(self.params,
+                                         {"tokens": prompt}, cache)
         req.out.append(int(jnp.argmax(logits[0])))
         self.stats["prefills"] += 1
         return KVHandoff(req=req, cache=cache, pos=s, slo="", prefill_tick=0)
 
     def tick(self, t: int, handoff: KVHandoffQueue) -> int:
         """Prefill up to ``budget`` admitted requests while the handoff
-        queue has room; returns the number prefilled this tick."""
+        queue has room; returns the number prefilled this tick.  All
+        lane work (controller replans, planner touches) runs under this
+        cell's backend scope when one is set."""
+        with _scope_ctx(self.scope):
+            return self._tick(t, handoff)
+
+    def _tick(self, t: int, handoff: KVHandoffQueue) -> int:
         self.stats["ticks"] += 1
         n = 0
         while ((self.budget is None or n < self.budget)
@@ -262,10 +313,17 @@ class DecodeCell:
     def __init__(self, cfg: ArchConfig, params, slots: int, max_seq: int,
                  planner: Optional[OffloadPlanner] = None,
                  controller: Optional[OffloadController] = None,
-                 step_telemetry: bool = False, spec_decode=None):
+                 step_telemetry: bool = False, spec_decode=None,
+                 scope: "lane_engine.BackendScope | None" = None):
         assert cfg.input_mode == "tokens", "cells serve token models"
         self.cfg, self.params = cfg, params
         self.slots = slots
+        # Admission limit for autoscaling: the cache stays allocated at
+        # ``slots`` (so growing is free) and only slots below ``limit``
+        # accept new work; after a shrink, busy slots above the limit
+        # finish their requests but are never refilled (lame-duck).
+        self.limit = slots
+        self.scope = scope
         self.max_seq = max_seq
         self.cache = M.init_cache(cfg, slots, max_seq, jnp.float32)
         self.active: list[Optional[Request]] = [None] * slots
@@ -296,12 +354,13 @@ class DecodeCell:
         return sum(1 for r in self.active if r is None)
 
     def admit(self, handoff: KVHandoffQueue, tick: int) -> int:
-        """Merge handed-off requests into free slots, FIFO, lowest slot
-        first — zero lane work: the merge is a pure cache write."""
+        """Merge handed-off requests into free slots below the admission
+        limit, FIFO, lowest slot first — zero lane work: the merge is a
+        pure cache write."""
         n = 0
-        for slot in range(self.slots):
+        for slot in range(min(self.slots, self.limit)):
             if self.active[slot] is None and len(handoff):
-                item = handoff.pop()
+                item = handoff.pop(tick)
 
                 def merge(full, one):
                     return full.at[:, slot:slot + 1].set(one)
@@ -313,7 +372,12 @@ class DecodeCell:
         return n
 
     def step(self, tick: int) -> int:
-        """One batched decode step; returns the batch size (0 = idle)."""
+        """One batched decode step; returns the batch size (0 = idle).
+        Runs under this cell's backend scope when one is set."""
+        with _scope_ctx(self.scope):
+            return self._step(tick)
+
+    def _step(self, tick: int) -> int:
         act = [i for i, r in enumerate(self.active) if r is not None]
         if not act:
             return 0
@@ -420,19 +484,22 @@ class DisaggServingEngine:
                  planner: Optional[OffloadPlanner] = None,
                  controller: Optional[OffloadController] = None,
                  prefill_controller: Optional[OffloadController] = None,
-                 step_telemetry: bool = False, spec_decode=None):
+                 step_telemetry: bool = False, spec_decode=None,
+                 prefill_scope: "lane_engine.BackendScope | None" = None,
+                 decode_scope: "lane_engine.BackendScope | None" = None):
         self.disagg = disagg or DisaggConfig.mirror()
         self.handoff = KVHandoffQueue(self.disagg.handoff_bound)
         self.prefill_cell = PrefillCell(
             cfg, params, max_seq, budget=self.disagg.prefill_budget,
             starvation_age=self.disagg.starvation_age,
             admission_capacity=self.disagg.admission_capacity,
-            controller=prefill_controller)
+            controller=prefill_controller, scope=prefill_scope)
         self.decode_cell = DecodeCell(cfg, params, slots, max_seq,
                                       planner=planner,
                                       controller=controller,
                                       step_telemetry=step_telemetry,
-                                      spec_decode=spec_decode)
+                                      spec_decode=spec_decode,
+                                      scope=decode_scope)
         self.ticks = 0
 
     # -- ServingEngine-compatible views --------------------------------
@@ -504,6 +571,33 @@ class DisaggServingEngine:
                     admit_ticks=dict(self.decode_cell.admit_ticks),
                     completion_ticks=dict(self.decode_cell.completions))
 
+    def wait_telemetry(self, tick: int | None = None) -> dict:
+        """Per-class admission-wait ages of the requests still waiting
+        — the live SLO pressure signal the autoscaler's grow rule reads
+        each tick.  Neutral over empty queues (``max_wait=0``,
+        ``mean_wait=0.0``), matching the zero-request convention."""
+        t = self.ticks if tick is None else int(tick)
+        ages: dict[str, list[int]] = {cls: [] for cls in SLO_CLASSES}
+        for enq, slo in self.prefill_cell.queue.wait_entries():
+            ages[slo].append(t - enq)
+        out = {}
+        for cls in SLO_CLASSES:
+            a = ages[cls]
+            out[cls] = dict(waiting=len(a),
+                            max_wait=(max(a) if a else 0),
+                            mean_wait=(sum(a) / len(a) if a else 0.0))
+        return out
+
+    def scopes_report(self) -> dict | None:
+        """Per-cell backend-scope record (None when neither cell is
+        scoped, so unscoped summaries/traces stay byte-identical)."""
+        pre, dec = self.prefill_cell.scope, self.decode_cell.scope
+        if pre is None and dec is None:
+            return None
+        return dict(
+            prefill=(pre.describe() if pre is not None else None),
+            decode=(dec.describe() if dec is not None else None))
+
     def _slo_summary(self) -> dict:
         """Per-class wait/latency means — neutral (0.0) over zero
         completions, never a divide by zero."""
@@ -566,4 +660,8 @@ class DisaggServingEngine:
             # golden traces stay byte-identical.
             out["disagg"]["shed"] = {
                 str(r): t for r, t in sorted(self.shed.items())}
+        scopes = self.scopes_report()
+        if scopes is not None:
+            # Same convention: only scoped cell pairs grow the key.
+            out["disagg"]["scopes"] = scopes
         return out

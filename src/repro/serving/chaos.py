@@ -122,11 +122,16 @@ def apply_action(act: ChaosAction, inj: faults.FaultInjector,
 
 def make_chaos_timeline(seed: int = 0, horizon: int = 30,
                         rungs: list[str] | None = None,
-                        scheduling: bool = True) -> list[ChaosAction]:
+                        scheduling: bool = True,
+                        scope=None) -> list[ChaosAction]:
     """A deterministic fault timeline covering every seam.
 
     Same ``(seed, horizon, rungs, scheduling)`` always yields the same
-    actions at the same ticks.  The composition: one transient fault on
+    actions at the same ticks.  ``scope`` — an optional
+    :class:`~repro.core.engine.BackendScope`: the default rung list is
+    then that scope's ladder (``engine.ladder_rungs(scope)``), so a
+    timeline aimed at one serve cell arms faults on the rungs that cell
+    will actually resolve through, not the process default's.  The composition: one transient fault on
     the top ladder rung early (absorbed by retry), one persistent burst
     on the top rung mid-run when a lower rung exists (trips the breaker,
     steps the ladder down), a lane-cache poison paired with a scrub one
@@ -136,7 +141,8 @@ def make_chaos_timeline(seed: int = 0, horizon: int = 30,
     faults provably cannot move work between ticks, the schedules the
     byte-identical-trace parity tests run.
     """
-    rungs = list(rungs) if rungs is not None else engine.ladder_rungs()
+    rungs = (list(rungs) if rungs is not None
+             else engine.ladder_rungs(scope))
     rng = np.random.default_rng(seed)
     top = "backend." + rungs[0]
     acts = [
@@ -179,7 +185,8 @@ def run_chaos_scenario(cfg, params, planner,
                        breaker_threshold: int = 3, retries: int = 1,
                        mesh=None, disagg=False, slo=None,
                        spec_decode=None,
-                       policy_kw: dict | None = None) -> dict:
+                       policy_kw: dict | None = None,
+                       prefill_scope=None, decode_scope=None) -> dict:
     """Serve a scenario under a seeded fault timeline; return the trace.
 
     Resets the fault state (events, breaker with ``breaker_threshold``,
@@ -190,6 +197,14 @@ def run_chaos_scenario(cfg, params, planner,
     every structured fault/degradation event (tick-tagged), the breaker
     state and the simulated backoff sleeps.  Deterministic end to end —
     the golden chaos trace pins the whole record byte-exactly.
+
+    ``prefill_scope`` / ``decode_scope`` (require ``disagg``) give each
+    cell its own :class:`~repro.core.engine.BackendScope` — its own
+    backend, ladder and circuit breaker.  Faults then trip the breaker
+    of whichever cell resolved through them, never the process-global
+    one, and the incident record gains a ``scope_breakers`` key (each
+    scope's breaker state, keyed by scope name; present only when
+    scoped, so the pinned golden chaos trace stays byte-identical).
     """
     with engine.lane_mesh_scope(mesh):
         spec = scenario if scenario is not None else \
@@ -218,7 +233,9 @@ def run_chaos_scenario(cfg, params, planner,
                     spec, cfg, params, planner, policy=policy,
                     fence=fence, policy_kw=policy_kw,
                     mesh=engine.lane_mesh(), disagg=disagg, slo=slo,
-                    spec_decode=spec_decode, on_tick=on_tick)
+                    spec_decode=spec_decode,
+                    prefill_scope=prefill_scope,
+                    decode_scope=decode_scope, on_tick=on_tick)
         finally:
             faults.set_tick(None)
     trace["chaos"] = dict(
@@ -231,4 +248,10 @@ def run_chaos_scenario(cfg, params, planner,
         breaker=faults.backend_breaker().info(),
         backoff_sleeps=list(clock.sleeps),
     )
+    scoped = [s for s in (prefill_scope, decode_scope)
+              if s is not None and s.breaker is not None]
+    if scoped:
+        trace["chaos"]["scope_breakers"] = {
+            s.name or f"scope{i}": s.breaker.info()
+            for i, s in enumerate(scoped)}
     return trace

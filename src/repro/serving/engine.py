@@ -103,6 +103,12 @@ class ServingEngine:
 
         self._decode = jax.jit(
             lambda p, c, t, pos: M.decode_step(cfg, p, c, t, pos))
+        # Jitted like decode: one compile per prompt length, then ~ms
+        # per prefill — eager prefill is the serving stack's tick-time
+        # ceiling (a daemon admitting tens of requests per tick spends
+        # its whole tick in op-by-op dispatch otherwise).
+        self._prefill_fn = jax.jit(
+            lambda p, b, c: M.prefill(cfg, p, b, c))
 
     # ------------------------------------------------------------------
     def submit(self, req: Request):
@@ -122,8 +128,8 @@ class ServingEngine:
         assert s < self.max_seq
         prompt = jnp.asarray(req.prompt, jnp.int32)[None]
         tmp_cache = M.init_cache(self.cfg, 1, self.max_seq, jnp.float32)
-        logits, tmp_cache = M.prefill(self.cfg, self.params,
-                                      {"tokens": prompt}, tmp_cache)
+        logits, tmp_cache = self._prefill_fn(self.params,
+                                             {"tokens": prompt}, tmp_cache)
         # merge the single-row cache into the batched cache at `slot`
         def merge(full, one):
             return full.at[:, slot:slot + 1].set(one)

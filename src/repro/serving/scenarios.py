@@ -498,6 +498,80 @@ class DisaggConfig:
         return DisaggConfig(**rec)
 
 
+@dataclasses.dataclass(frozen=True)
+class AutoscaleConfig:
+    """Cross-cell decode-slot autoscaling — THE grow/shrink rule spec.
+
+    The decode cell's KV cache stays allocated at its ``slots``
+    capacity; autoscaling moves only the *admission limit* — how many
+    slots may accept new work.  Growing is therefore free (raise the
+    limit) and shrinking is graceful: busy slots above the limit finish
+    their requests but are never refilled (lame-duck), which is what
+    makes the rule tick-exactly mirrorable without cache reallocation.
+
+    The rule, applied once at the END of every tick (after decode):
+
+    1. ``pressure`` = waiting admissions whose age meets their class
+       target (``latency_wait`` / ``throughput_wait`` ticks) — the
+       per-class SLO wait telemetry the cells report.
+    2. While ``cooldown`` ticks remain since the last action, only the
+       countdown advances.
+    3. Grow by one slot (up to ``max_slots``) when ``pressure > 0``.
+    4. Otherwise, when nothing waits anywhere (admission + handoff
+       empty) and fewer than ``limit`` slots are busy, an idle streak
+       advances; ``idle_ticks`` consecutive idle ticks shrink the limit
+       by one (down to ``min_slots``).
+    5. Anything else resets the idle streak.
+
+    The new limit takes effect at the next tick's admissions.
+    ``simulate_disagg(..., autoscale=...)`` is the model-free
+    implementation; ``serving/daemon.py``'s ``AutoscaleController`` is
+    the independent real-cell one — the differential parity suite holds
+    them together, like every prior scheduling feature.  ``max_slots``
+    ``None`` means the scenario's slot capacity.
+    """
+
+    min_slots: int = 1
+    max_slots: int | None = None
+    start_slots: int | None = None     # None = min_slots
+    latency_wait: int = 2
+    throughput_wait: int = 6
+    idle_ticks: int = 3
+    cooldown: int = 2
+
+    def __post_init__(self):
+        if self.min_slots < 1:
+            raise ValueError("min_slots must be >= 1")
+        if self.max_slots is not None and self.max_slots < self.min_slots:
+            raise ValueError("max_slots must be >= min_slots or None")
+        if (self.start_slots is not None
+                and self.start_slots < self.min_slots):
+            raise ValueError("start_slots must be >= min_slots or None")
+        if self.latency_wait < 0 or self.throughput_wait < 0:
+            raise ValueError("class target waits must be >= 0")
+        if self.idle_ticks < 1:
+            raise ValueError("idle_ticks must be >= 1")
+        if self.cooldown < 0:
+            raise ValueError("cooldown must be >= 0")
+
+    def class_wait(self, slo: str) -> int:
+        return (self.latency_wait if slo == SLO_LATENCY
+                else self.throughput_wait)
+
+    def to_record(self) -> dict:
+        # None fields omitted (like DisaggConfig.to_record) so records
+        # stay minimal and byte-stable as defaults evolve.
+        rec = dataclasses.asdict(self)
+        for k in ("max_slots", "start_slots"):
+            if rec[k] is None:
+                del rec[k]
+        return rec
+
+    @staticmethod
+    def from_record(rec: dict) -> "AutoscaleConfig":
+        return AutoscaleConfig(**rec)
+
+
 def assign_slo(spec: ScenarioSpec, frac_latency: float = 0.5,
                seed: int | None = None) -> dict[int, str]:
     """Seeded per-tenant SLO classes for a scenario's requests.
@@ -557,6 +631,7 @@ def simulate_disagg(spec: ScenarioSpec,
                     disagg: DisaggConfig | None = None,
                     slo: dict[int, str] | None = None,
                     spec_decode: SpecDecodeConfig | None = None,
+                    autoscale: AutoscaleConfig | None = None,
                     max_ticks: int = 100_000) -> dict:
     """Tick-exact model-free mirror of the disaggregated cell pair.
 
@@ -580,6 +655,10 @@ def simulate_disagg(spec: ScenarioSpec,
     accept/advance round per active slot per tick instead of a
     single-token decrement — the same :meth:`SpecDecodeConfig.advance`
     spec :func:`simulate_spec_decode` pins for the monolithic engine.
+    With ``autoscale`` the decode admission limit follows the
+    :class:`AutoscaleConfig` grow/shrink rule (applied at the end of
+    every tick; the result gains a ``limits`` key — the limit in force
+    each tick).
     """
     cfg = disagg or DisaggConfig.mirror()
     slo = slo or {}
@@ -601,6 +680,18 @@ def simulate_disagg(spec: ScenarioSpec,
     max_depth = 0
     seq = 0
     t = 0
+    # Autoscaling state: the admission limit in force, its per-tick
+    # trace, and the rule's cooldown/idle counters (see AutoscaleConfig
+    # — this block and serving/daemon.py's AutoscaleController are the
+    # two implementations of that one spec).
+    auto_max = (spec.slots if autoscale is None
+                else min(autoscale.max_slots or spec.slots, spec.slots))
+    limit = (spec.slots if autoscale is None
+             else min(autoscale.start_slots or autoscale.min_slots,
+                      auto_max))
+    limits: list[int] = []
+    cool = 0
+    idle = 0
     while i < len(pending) or waiting or handoff or any(active):
         while i < len(pending) and pending[i].step <= t:
             a = pending[i]
@@ -623,7 +714,7 @@ def simulate_disagg(spec: ScenarioSpec,
             max_depth = max(max_depth, len(handoff))
             n += 1
         prefills.append(n)
-        for s in range(spec.slots):
+        for s in range(limit):
             if active[s] == 0 and handoff:
                 rid = handoff.pop(0)
                 admit_ticks[rid] = t
@@ -643,6 +734,26 @@ def simulate_disagg(spec: ScenarioSpec,
                 if active[s] == 0:
                     completion_ticks[slot_rid[s]] = t
         depth.append(len(handoff))
+        if autoscale is not None:
+            limits.append(limit)
+            busy = sum(1 for rem in active if rem > 0)
+            pressure = sum(1 for enq, _, _, s_cls in waiting
+                           if t - enq >= autoscale.class_wait(s_cls))
+            if cool > 0:
+                cool -= 1
+            elif pressure > 0 and limit < auto_max:
+                limit += 1
+                cool = autoscale.cooldown
+                idle = 0
+            elif not waiting and not handoff and busy < limit:
+                idle += 1
+                if idle >= autoscale.idle_ticks \
+                        and limit > autoscale.min_slots:
+                    limit -= 1
+                    cool = autoscale.cooldown
+                    idle = 0
+            else:
+                idle = 0
         t += 1
         if t > max_ticks:
             raise ScenarioDrainError(
@@ -652,11 +763,14 @@ def simulate_disagg(spec: ScenarioSpec,
                 oldest_age=(t - min(enq for enq, _, _, _ in waiting)
                             if waiting else None),
                 last_batch=[rem for rem in active if rem > 0])
-    return dict(per_tick_batch=batches, per_tick_prefills=prefills,
-                handoff_depth=depth, max_handoff_depth=max_depth,
-                prefill_ticks=prefill_ticks, admit_ticks=admit_ticks,
-                completion_ticks=completion_ticks,
-                shed_ticks=shed_ticks, rounds=rounds)
+    out = dict(per_tick_batch=batches, per_tick_prefills=prefills,
+               handoff_depth=depth, max_handoff_depth=max_depth,
+               prefill_ticks=prefill_ticks, admit_ticks=admit_ticks,
+               completion_ticks=completion_ticks,
+               shed_ticks=shed_ticks, rounds=rounds)
+    if autoscale is not None:
+        out["limits"] = limits
+    return out
 
 
 def run_policy_over_trace(planner, policy, batches: Sequence[int],
@@ -688,6 +802,8 @@ def run_scenario(scenario: ScenarioSpec, cfg, params, planner,
                  disagg: "bool | DisaggConfig" = False,
                  slo: dict[int, str] | None = None,
                  spec_decode: SpecDecodeConfig | None = None,
+                 autoscale: AutoscaleConfig | None = None,
+                 prefill_scope=None, decode_scope=None,
                  on_tick=None) -> dict:
     """Serve the scenario end to end (real model decode) under an
     adaptive offload controller; return the replayable trace record.
@@ -721,6 +837,20 @@ def run_scenario(scenario: ScenarioSpec, cfg, params, planner,
     trace gains a ``"spec_decode"`` key (embedded config + round
     telemetry) so it replays; vanilla traces are byte-unchanged.
 
+    ``autoscale`` — an optional :class:`AutoscaleConfig` (requires
+    ``disagg``): the decode cell's admission limit follows the
+    grow/shrink rule via a ``serving/daemon.py`` ``AutoscaleController``
+    and the trace gains an ``"autoscale"`` key (embedded config +
+    per-tick limit trace) so it replays; fixed-slot traces are
+    byte-unchanged.
+
+    ``prefill_scope`` / ``decode_scope`` — optional per-cell
+    :class:`~repro.core.engine.BackendScope` objects (require
+    ``disagg``): each cell activates its scope around its tick work, so
+    the two cells resolve lanes on independent backends with
+    independent circuit breakers — a fault that degrades one cell's
+    ladder never moves the other's.  Unscoped runs are byte-unchanged.
+
     ``on_tick`` — optional ``fn(t, engine)`` called at the top of every
     driver tick, before that tick's submissions.  The chaos harness
     (``serving/chaos.py``) uses it to fire scheduled fault timelines
@@ -731,12 +861,14 @@ def run_scenario(scenario: ScenarioSpec, cfg, params, planner,
     with lane_mesh_scope(mesh):
         return _run_scenario(scenario, cfg, params, planner, policy,
                              fence, max_seq, policy_kw, disagg, slo,
-                             on_tick, spec_decode)
+                             on_tick, spec_decode, autoscale,
+                             prefill_scope, decode_scope)
 
 
 def _run_scenario(scenario, cfg, params, planner, policy, fence,
                   max_seq, policy_kw, disagg=False, slo=None,
-                  on_tick=None, spec_decode=None) -> dict:
+                  on_tick=None, spec_decode=None, autoscale=None,
+                  prefill_scope=None, decode_scope=None) -> dict:
     from .engine import Request, ServingEngine
     from .policy import OffloadController
 
@@ -754,11 +886,23 @@ def _run_scenario(scenario, cfg, params, planner, policy, fence,
         eng = DisaggServingEngine(cfg, params, slots=scenario.slots,
                                   max_seq=max_seq, disagg=dcfg,
                                   controller=controller,
-                                  spec_decode=spec_decode)
+                                  spec_decode=spec_decode,
+                                  prefill_scope=prefill_scope,
+                                  decode_scope=decode_scope)
     else:
+        if autoscale is not None:
+            raise ValueError("autoscale requires disagg serving "
+                             "(the decode cell owns the slot limit)")
+        if prefill_scope is not None or decode_scope is not None:
+            raise ValueError("per-cell backend scopes require disagg "
+                             "serving (the cells own scope activation)")
         eng = ServingEngine(cfg, params, slots=scenario.slots,
                             max_seq=max_seq, controller=controller,
                             spec_decode=spec_decode)
+    scaler = None
+    if autoscale is not None:
+        from .daemon import AutoscaleController
+        scaler = AutoscaleController(autoscale, eng)
     if spec_decode is not None:
         # Keep the hot small-shape draft lanes pinned at the MRU end of
         # the lane LRU for the whole run (see OffloadPlanner.touch_draft
@@ -788,6 +932,8 @@ def _run_scenario(scenario, cfg, params, planner, policy, fence,
             i += 1
         stepped = eng.step()
         per_tick.append(eng.step_batches[-1] if stepped else 0)
+        if scaler is not None:
+            scaler.observe(t)
         t += 1
         if t > 100_000:
             step_of = {a.rid: a.step for a in scenario.arrivals}
@@ -824,6 +970,8 @@ def _run_scenario(scenario, cfg, params, planner, policy, fence,
     )
     if disagg:
         trace["disagg"] = stats["disagg"]
+    if scaler is not None:
+        trace["autoscale"] = scaler.report()
     if spec_decode is not None:
         trace["spec_decode"] = dict(config=spec_decode.to_record(),
                                     **eng.spec_report())
@@ -860,13 +1008,18 @@ def replay_trace(trace: dict, cfg, params, planner, mesh=None) -> dict:
     disagg: "bool | DisaggConfig" = False
     slo = None
     spec_decode = None
+    autoscale = None
     if "disagg" in trace:
         disagg = DisaggConfig.from_record(trace["disagg"]["config"])
         slo = {int(r): s for r, s in trace["disagg"]["slo"].items()}
     if "spec_decode" in trace:
         spec_decode = SpecDecodeConfig.from_record(
             trace["spec_decode"]["config"])
+    if "autoscale" in trace:
+        autoscale = AutoscaleConfig.from_record(
+            trace["autoscale"]["config"])
     return run_scenario(ScenarioSpec.from_record(trace["scenario"]),
                         cfg, params, planner, policy=trace["policy"],
                         fence=trace["fence"], mesh=mesh,
-                        disagg=disagg, slo=slo, spec_decode=spec_decode)
+                        disagg=disagg, slo=slo, spec_decode=spec_decode,
+                        autoscale=autoscale)

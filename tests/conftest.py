@@ -1,12 +1,13 @@
 """Shared fixtures: module-state hygiene for the lane resolver.
 
 ``engine.configure_lane_devices`` / ``engine.configure_lane_mesh`` set
-process-global state.  A test that forces a device cap or a mesh and
-fails (or simply forgets to restore) would silently change the execution
-backend of every later test in the session — the parity suites would
-then compare a path against itself.  The autouse fixture below makes
-that impossible: every test starts and ends on the default backend
-(env-controlled device list, no mesh).
+the process-default :class:`~repro.core.engine.BackendScope`.  A test
+that forces a device cap or a mesh and fails (or simply forgets to
+restore) would silently change the execution backend of every later
+test in the session — the parity suites would then compare a path
+against itself.  The autouse fixture below makes that impossible:
+every test starts and ends on the default backend (env-controlled
+device list, no mesh, no active per-cell scope).
 """
 import pytest
 
@@ -15,14 +16,10 @@ from repro.core import engine, faults
 
 @pytest.fixture(autouse=True)
 def _reset_lane_backend_state():
-    engine.configure_lane_devices(None)
-    engine.configure_lane_mesh(None)
-    engine.configure_lane_backend(None)
+    engine.reset_backend_scopes()
     engine.configure_scan_unroll(None)
     faults.reset()
     yield
-    engine.configure_lane_devices(None)
-    engine.configure_lane_mesh(None)
-    engine.configure_lane_backend(None)
+    engine.reset_backend_scopes()
     engine.configure_scan_unroll(None)
     faults.reset()

@@ -87,6 +87,8 @@ def test_pallas_resolver_direct_matches_ref():
 # ---------------------------------------------------------------------
 
 def test_backend_config_precedence(monkeypatch):
+    # Env-neutral: the pallas CI job exports REPRO_LANE_BACKEND.
+    monkeypatch.delenv("REPRO_LANE_BACKEND", raising=False)
     assert engine.lane_backend() == "scan"      # default
     monkeypatch.setenv("REPRO_LANE_BACKEND", "pallas")
     assert engine.lane_backend() == "pallas"
@@ -103,7 +105,8 @@ def test_backend_invalid_names_rejected(monkeypatch):
     assert engine.lane_backend() == "scan"   # invalid env value ignored
 
 
-def test_backend_scope_restores_on_error():
+def test_backend_scope_restores_on_error(monkeypatch):
+    monkeypatch.delenv("REPRO_LANE_BACKEND", raising=False)
     with pytest.raises(RuntimeError):
         with engine.lane_backend_scope("pallas"):
             raise RuntimeError("boom")
@@ -193,10 +196,13 @@ def test_unroll_keys_separate_compile_cache_entries():
     silent reuse of a mismatched compilation."""
     lanes = _lanes(31, n=2, max_ops=16)
     nb = DEFAULT_SYSTEM.derive_cycles().num_banks
-    engine.configure_scan_unroll(1)
-    engine.lane_cache_reset()
-    engine.resolve_lanes(lanes)
-    engine.configure_scan_unroll(2)
-    engine.lane_cache_reset()
-    engine.resolve_lanes(lanes)
+    # Pin the scan backend: under REPRO_LANE_BACKEND=pallas the resolves
+    # would route through the pallas kernel and never key _RESOLVERS.
+    with engine.lane_backend_scope("scan"):
+        engine.configure_scan_unroll(1)
+        engine.lane_cache_reset()
+        engine.resolve_lanes(lanes)
+        engine.configure_scan_unroll(2)
+        engine.lane_cache_reset()
+        engine.resolve_lanes(lanes)
     assert {(nb, 1), (nb, 2)} <= set(engine._RESOLVERS)
